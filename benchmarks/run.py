@@ -1,0 +1,21 @@
+"""Benchmark harness entry: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import tables
+    print("name,us_per_call,derived")
+    tables.bench_datasets()            # Table I
+    tables.bench_covertree_vs_snn()    # Table III
+    tables.bench_speedup_over_snn()    # Table II
+    tables.bench_strong_scaling()      # Fig 2
+    tables.bench_phase_breakdown()     # Figs 3-5
+    tables.bench_distance_kernels()    # kernel layer
+
+
+if __name__ == "__main__":
+    main()

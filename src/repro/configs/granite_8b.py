@@ -1,0 +1,8 @@
+"""Granite 8B code [arXiv:2405.04324]: 36L d4096 32H GQA(kv=8) ff14336 v49152."""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="granite-8b", family="dense",
+    n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=49152, rope_theta=1e4,
+))

@@ -1,0 +1,9 @@
+"""Granite MoE 3B-a800m [hf:ibm-granite]: 32L d1536 24H GQA(kv=8) ff512
+per-expert, v49155, 40 experts top-8."""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="granite-moe-3b-a800m", family="moe",
+    n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8,
+    d_ff=512, vocab=49155, n_experts=40, top_k=8,
+))

@@ -1,0 +1,10 @@
+"""InternVL2 26B [arXiv:2404.16821]: InternLM2 decoder backbone 48L d6144
+48H GQA(kv=8) ff16384 v92553 + InternViT frontend (STUB: input_specs
+provides precomputed patch embeddings, 256 tokens x 3200d)."""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="internvl2-26b", family="vlm", frontend="vision",
+    n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=16384, vocab=92553, n_prefix=256, frontend_dim=3200,
+))

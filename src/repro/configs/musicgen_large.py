@@ -1,0 +1,10 @@
+"""MusicGen large [arXiv:2306.05284]: decoder-only over EnCodec tokens,
+48L d2048 32H (kv=32 -> MHA) ff8192, 4 codebooks x 2048 vocab. Audio
+frontend is a STUB: tokens are precomputed EnCodec codes."""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="musicgen-large", family="audio", frontend="audio",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab=2048, n_codebooks=4, tied_embeddings=False,
+))

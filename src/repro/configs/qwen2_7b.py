@@ -1,0 +1,8 @@
+"""Qwen2 7B [arXiv:2407.10671]: 28L d3584 28H GQA(kv=4) ff18944 v152064, QKV bias."""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2-7b", family="dense",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+    d_ff=18944, vocab=152064, qkv_bias=True, rope_theta=1e6,
+))

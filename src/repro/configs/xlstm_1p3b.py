@@ -1,0 +1,13 @@
+"""xLSTM 1.3B [arXiv:2405.04517, unverified]: 48L d2048 4H, d_ff=0 (mLSTM
+blocks carry their own up-projection), v50304.
+
+Realized as mLSTM (matrix-memory) blocks via the shared SSD scan; the sLSTM
+variant's scalar memory is a special case (documented in DESIGN.md).
+Sub-quadratic => runs long_500k."""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab=50304, subquadratic=True,
+))

@@ -1,0 +1,14 @@
+"""Zamba2 1.2B [arXiv:2411.15242]: 38L d2048 Mamba2 backbone + shared
+attention blocks (32H kv=32, ff8192), v32000, ssm_state=64.
+
+Hybrid realization: 38 Mamba2 (SSD) layers; one SHARED attention+MLP block
+applied after every 6 SSD layers (zamba2's shared-weights trick; per-
+application KV caches). Sub-quadratic => runs long_500k."""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab=32000, ssm_state=64, ssm_head_dim=64,
+    attn_every=6, subquadratic=True,
+))

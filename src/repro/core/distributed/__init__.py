@@ -1,0 +1,7 @@
+from .device import (  # noqa: F401
+    LandmarkPlan,
+    landmark_nng,
+    make_nng_mesh,
+    plan_landmark,
+    systolic_nng,
+)

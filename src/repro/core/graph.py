@@ -1,0 +1,66 @@
+"""ε-graph edge-set representation and utilities."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class EpsGraph:
+    """An undirected ε-graph on n points, stored as canonical (i < j) edges."""
+
+    def __init__(self, n: int, src: np.ndarray, dst: np.ndarray):
+        self.n = int(n)
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        lo = np.minimum(src, dst)
+        hi = np.maximum(src, dst)
+        keep = lo != hi  # drop self loops
+        key = lo[keep] * n + hi[keep]
+        key = np.unique(key)
+        self.src = (key // n).astype(np.int64)
+        self.dst = (key % n).astype(np.int64)
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.src)
+
+    @property
+    def avg_degree(self) -> float:
+        return 2.0 * self.num_edges / max(self.n, 1)
+
+    def degree(self) -> np.ndarray:
+        deg = np.zeros(self.n, dtype=np.int64)
+        np.add.at(deg, self.src, 1)
+        np.add.at(deg, self.dst, 1)
+        return deg
+
+    def edge_key(self) -> np.ndarray:
+        return self.src * self.n + self.dst
+
+    def __eq__(self, other) -> bool:
+        return (
+            isinstance(other, EpsGraph)
+            and self.n == other.n
+            and len(self.src) == len(other.src)
+            and bool(np.array_equal(self.edge_key(), other.edge_key()))
+        )
+
+    def symmetric_difference(self, other: "EpsGraph") -> int:
+        a = set(self.edge_key().tolist())
+        b = set(other.edge_key().tolist())
+        return len(a ^ b)
+
+    def __repr__(self):
+        return f"EpsGraph(n={self.n}, edges={self.num_edges}, avg_deg={self.avg_degree:.2f})"
+
+
+def merge_graphs(n: int, graphs) -> EpsGraph:
+    src = np.concatenate([g.src for g in graphs]) if graphs else np.zeros(0, np.int64)
+    dst = np.concatenate([g.dst for g in graphs]) if graphs else np.zeros(0, np.int64)
+    return EpsGraph(n, src, dst)
+
+
+def edges_from_pairs(n: int, pairs: np.ndarray) -> EpsGraph:
+    if len(pairs) == 0:
+        return EpsGraph(n, np.zeros(0, np.int64), np.zeros(0, np.int64))
+    pairs = np.asarray(pairs)
+    return EpsGraph(n, pairs[:, 0], pairs[:, 1])

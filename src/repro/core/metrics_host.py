@@ -1,0 +1,91 @@
+"""Host-side (numpy) metric helpers for control-flow-heavy tree code.
+
+The device/TPU path uses ``repro.kernels``; the cover tree's level loop is
+host-driven, so its per-iteration rowwise distances run in numpy to avoid
+dispatch overhead on small batches. Semantics identical to kernels/ops.py:
+"comparable" distances are squared L2 for euclidean, raw counts for hamming.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class HostMetric:
+    name: str
+
+    def cdist(self, x: np.ndarray, y: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def rowwise(self, x: np.ndarray, y: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def comparable(self, eps: float) -> float:
+        raise NotImplementedError
+
+    def true(self, c):
+        raise NotImplementedError
+
+
+class HostEuclidean(HostMetric):
+    name = "euclidean"
+
+    def cdist(self, x, y):
+        x = np.asarray(x, np.float32)
+        y = np.asarray(y, np.float32)
+        xn = np.einsum("ij,ij->i", x, x)[:, None]
+        yn = np.einsum("ij,ij->i", y, y)[None, :]
+        d = xn + yn - 2.0 * (x @ y.T)
+        return np.maximum(d, 0.0, out=d)
+
+    def rowwise(self, x, y):
+        # float64 diff form — the framework's exactness ground truth
+        diff = np.asarray(x, np.float64) - np.asarray(y, np.float64)
+        return np.einsum("ij,ij->i", diff, diff)
+
+    def band_slack(self, x, y, ceps):
+        # BLAS3 fp32 cancellation error bound for the candidate band
+        xn = float(np.max(np.einsum("ij,ij->i", x, x))) if len(x) else 0.0
+        yn = float(np.max(np.einsum("ij,ij->i", y, y))) if len(y) else 0.0
+        return (xn + yn + ceps) * 1e-5 + 1e-9
+
+    def comparable(self, eps):
+        return float(eps) ** 2
+
+    def true(self, c):
+        return np.sqrt(np.maximum(np.asarray(c, np.float64), 0.0))
+
+
+class HostHamming(HostMetric):
+    name = "hamming"
+
+    def cdist(self, x, y):
+        # (q, w) x (p, w) uint32 -> float32 counts. Chunked to bound memory.
+        x = np.asarray(x, np.uint32)
+        y = np.asarray(y, np.uint32)
+        q = x.shape[0]
+        out = np.empty((q, y.shape[0]), np.float32)
+        step = max(1, (1 << 24) // max(y.size, 1))
+        for i in range(0, q, step):
+            xor = np.bitwise_xor(x[i : i + step, None, :], y[None, :, :])
+            out[i : i + step] = np.bitwise_count(xor).sum(axis=-1, dtype=np.int64)
+        return out
+
+    def rowwise(self, x, y):
+        xor = np.bitwise_xor(np.asarray(x, np.uint32), np.asarray(y, np.uint32))
+        return np.bitwise_count(xor).sum(axis=-1, dtype=np.int64).astype(np.float64)
+
+    def band_slack(self, x, y, ceps):
+        return 0.0  # integer distances are exact
+
+    def comparable(self, eps):
+        return float(eps)
+
+    def true(self, c):
+        return np.asarray(c, np.float64)
+
+
+HOST_METRICS = {"euclidean": HostEuclidean(), "hamming": HostHamming()}
+
+
+def get_host_metric(name: str) -> HostMetric:
+    return HOST_METRICS[name]

@@ -1,0 +1,2 @@
+from .pipeline import synthetic_lm_batches, TokenBatcher  # noqa: F401
+from .pointsets import load_pointset, synthetic_pointset  # noqa: F401

@@ -1,0 +1,57 @@
+"""Point-cloud sources for the ε-NNG engine.
+
+Real dataset loaders (fvecs/bvecs/npy) are used when files exist; otherwise
+synthetic stand-ins matched to the paper's Table I characteristics
+(n, dim, metric, low intrinsic dimensionality via clustered manifolds).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+
+def synthetic_pointset(n: int, dim: int, metric: str = "euclidean",
+                       seed: int = 0, n_clusters: int | None = None,
+                       cluster_std: float = 0.3, intrinsic_dim: int | None = None):
+    """Clustered low-intrinsic-dimension cloud (the paper's sparsity regime)."""
+    rng = np.random.default_rng(seed)
+    n_clusters = n_clusters or max(8, int(np.sqrt(n) / 4))
+    if metric == "euclidean":
+        idim = intrinsic_dim or max(2, dim // 8)
+        # clusters on a low-dim manifold embedded in dim
+        basis = rng.normal(size=(idim, dim)).astype(np.float32)
+        ctrs = rng.normal(size=(n_clusters, idim)).astype(np.float32) * 6.0
+        assign = rng.integers(0, n_clusters, n)
+        low = ctrs[assign] + rng.normal(size=(n, idim)).astype(np.float32) * cluster_std
+        return (low @ basis / np.sqrt(idim)).astype(np.float32)
+    if metric == "hamming":
+        words = dim  # dim = packed uint32 words
+        ctrs = rng.integers(0, 2**32, size=(n_clusters, words), dtype=np.uint32)
+        assign = rng.integers(0, n_clusters, n)
+        pts = ctrs[assign].copy()
+        # flip a small random subset of bits per point
+        nflip = max(1, int(words * 32 * 0.03))
+        for k in range(nflip):
+            word = rng.integers(0, words, n)
+            bit = rng.integers(0, 32, n).astype(np.uint32)
+            pts[np.arange(n), word] ^= (np.uint32(1) << bit)
+        return pts
+    raise ValueError(metric)
+
+
+def _read_fvecs(path: str) -> np.ndarray:
+    raw = np.fromfile(path, dtype=np.int32)
+    d = raw[0]
+    return raw.reshape(-1, d + 1)[:, 1:].view(np.float32)
+
+
+def load_pointset(name: str, n: int, dim: int, metric: str, data_dir: str = "data"):
+    """Load a real dataset if present, else deterministic synthetic."""
+    for ext, reader in ((".fvecs", _read_fvecs),
+                        (".npy", np.load)):
+        path = os.path.join(data_dir, name + ext)
+        if os.path.exists(path):
+            pts = reader(path)[:n]
+            return np.ascontiguousarray(pts)
+    return synthetic_pointset(n, dim, metric, seed=abs(hash(name)) % 2**31)

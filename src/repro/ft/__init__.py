@@ -1,0 +1,2 @@
+from .runner import FTConfig, resilient_loop  # noqa: F401
+from .straggler import straggler_tile_schedule  # noqa: F401

@@ -1,0 +1,59 @@
+"""Straggler mitigation for the ε-NNG ring: work-stealing tile schedule.
+
+The systolic algorithm's step time is max over ranks of the (local ×
+visiting) tile cost. With skewed per-rank point densities (or a slow host),
+the ring rate is set by the slowest rank. Mitigation: the planner measures
+per-rank tile costs (cell sizes / degree estimates) and emits a BALANCED
+tile schedule — each rank's sequence of (owner, visitor) block pairs — such
+that expensive pairs spread across ranks instead of landing on one. Ranks
+execute their schedule positionally; the ppermute pattern is unchanged, so
+no extra collectives are introduced (tiles are *reassigned*, blocks still
+rotate). This is the scheduling analogue of multiway number partitioning
+applied to tile costs rather than cell sizes.
+"""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+
+def straggler_tile_schedule(
+    tile_cost: np.ndarray, nranks: int, rounds: int | None = None
+) -> list[list[tuple[int, int]]]:
+    """tile_cost: (N, N) predicted cost of evaluating block-pair (i, j)
+    (i <= j used; symmetric). Returns per-rank ordered lists of block pairs,
+    LPT-balanced by cost, covering every unordered pair exactly once.
+    """
+    N = nranks
+    pairs = [(i, j) for i in range(N) for j in range(i, N)]
+    pairs.sort(key=lambda p: -float(tile_cost[p[0], p[1]]))
+    heap = [(0.0, r) for r in range(N)]
+    heapq.heapify(heap)
+    sched: list[list[tuple[int, int]]] = [[] for _ in range(N)]
+    for (i, j) in pairs:
+        load, r = heapq.heappop(heap)
+        sched[r].append((i, j))
+        heapq.heappush(heap, (load + float(tile_cost[i, j]), r))
+    return sched
+
+
+def schedule_makespan(sched, tile_cost) -> float:
+    return max(
+        sum(float(tile_cost[i, j]) for (i, j) in lane) for lane in sched)
+
+
+def naive_makespan(tile_cost, nranks) -> float:
+    """Cost of the paper's positional schedule: rank j evaluates (j, j+r)."""
+    N = nranks
+    loads = np.zeros(N)
+    for r in range(N // 2 + 1):
+        for j in range(N):
+            b = (j + r) % N
+            if r == 0 and b != j:
+                continue
+            if N % 2 == 0 and r == N // 2 and j >= b:
+                continue
+            i, k = min(j, b), max(j, b)
+            loads[j] += tile_cost[i, k]
+    return float(loads.max())

@@ -1,0 +1,9 @@
+from .ops import (  # noqa: F401
+    Euclidean,
+    Hamming,
+    Metric,
+    eps_count,
+    get_metric,
+    pairwise_hamming,
+    pairwise_sqdist,
+)

@@ -1,0 +1,96 @@
+"""Fused ε-NNG tile kernel: distances + threshold + bit-packed adjacency.
+
+The systolic step's HBM traffic is dominated by materializing the fp32
+distance tile (n² × 4 B) and sorting it for id extraction. This kernel keeps
+the distance tile in VMEM and writes only:
+
+  - cnt  (n,)        exact per-row ε-neighbor counts,
+  - bits (n, n/32)   the adjacency bitmask, packed 32 columns per uint32 —
+                     128× smaller than the fp32 distance tile.
+
+Bit packing runs on the MXU too: mask.int8 @ [1,2,4,...,2^31] as an
+(TQ,32)×(32,) contraction per word. Downstream id extraction / merging
+consumes the bitmask (cheap VPU ops over 1/128 the bytes).
+
+Per-step HBM traffic for the 1M-point sift workload (n_loc=4096):
+  before: 67 MB distance tile + ≥134 MB sort traffic
+  after:  2 MB points + 2 MB bits + 16 KB counts      (~50–100× less)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _nng_tile_kernel(x_ref, y_ref, yvalid_ref, cnt_ref, bits_ref, *, eps2):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    x = x_ref[...].astype(jnp.float32)      # (TQ, d)
+    y = y_ref[...].astype(jnp.float32)      # (TP, d)
+    acc = jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    xs = (x * x).sum(axis=1)[:, None]
+    ys = (y * y).sum(axis=1)[None, :]
+    d2 = xs + ys - 2.0 * acc
+    hit = (d2 <= eps2) & (yvalid_ref[...] != 0)[None, :]    # (TQ, TP)
+    cnt_ref[...] += jnp.sum(hit.astype(jnp.int32), axis=1)
+    # pack 32 columns per uint32 word (little-endian bit order)
+    tq, tp = hit.shape
+    words = hit.reshape(tq, tp // 32, 32).astype(jnp.uint32)
+    powers = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    bits_ref[...] = jnp.sum(words * powers[None, None, :], axis=-1)
+
+
+def nng_tile_pallas(
+    x, y, y_valid, eps: float, *, tq: int = 256, tp: int = 512,
+    interpret: bool = False,
+):
+    """x (q, d), y (p, d), y_valid (p,) int32 -> (cnt (q,), bits (q, p/32)).
+
+    q % tq == 0, p % tp == 0, tp % 32 == 0 (caller pads; pad rows must have
+    y_valid == 0)."""
+    q, d = x.shape
+    p, _ = y.shape
+    assert q % tq == 0 and p % tp == 0 and tp % 32 == 0
+    grid = (q // tq, p // tp)
+    kernel = functools.partial(_nng_tile_kernel, eps2=float(eps) ** 2)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tp, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tp,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+            pl.BlockSpec((tq, tp // 32), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+            jax.ShapeDtypeStruct((q, p // 32), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(x, y, y_valid)
+
+
+def nng_tile_ref(x, y, y_valid, eps: float):
+    """Pure-jnp oracle."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    d2 = (jnp.sum(x * x, 1)[:, None] + jnp.sum(y * y, 1)[None, :]
+          - 2.0 * x @ y.T)
+    hit = (d2 <= jnp.float32(eps) ** 2) & (y_valid != 0)[None, :]
+    cnt = jnp.sum(hit.astype(jnp.int32), axis=1)
+    q, p = hit.shape
+    words = hit.reshape(q, p // 32, 32).astype(jnp.uint32)
+    powers = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    bits = jnp.sum(words * powers[None, None, :], axis=-1)
+    return cnt, bits

@@ -1,0 +1,182 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles: padding to tile multiples, masking of pad rows, dtype policy,
+CPU fallback (interpret mode / pure-jnp) so the whole framework runs on this
+container while targeting TPU.
+
+`PALLAS_MODE` resolves to:
+  - "compiled"  on TPU backends
+  - "interpret" when REPRO_PALLAS=interpret (correctness validation on CPU)
+  - "jnp"       otherwise (fast CPU path via the oracles — the kernels are
+                 still the TPU codepath and are tested in interpret mode)
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .eps_count import eps_count_pallas
+from .pairwise_hamming import pairwise_hamming_pallas
+from .pairwise_l2 import pairwise_sqdist_pallas
+
+_BIG = jnp.float32(3.0e38)
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_PALLAS", "")
+    if env in ("interpret", "jnp", "compiled"):
+        return env
+    return "compiled" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _pad_rows(a: jnp.ndarray, mult: int, value=0):
+    n = a.shape[0]
+    rem = (-n) % mult
+    if rem == 0:
+        return a, n
+    pad = [(0, rem)] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, pad, constant_values=value), n
+
+
+def _pad_cols(a: jnp.ndarray, mult: int, value=0):
+    d = a.shape[1]
+    rem = (-d) % mult
+    if rem == 0:
+        return a
+    return jnp.pad(a, [(0, 0), (0, rem)], constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _sqdist_padded(x, y, interpret):
+    return pairwise_sqdist_pallas(x, y, interpret=interpret)
+
+
+def pairwise_sqdist(x, y) -> jnp.ndarray:
+    """Squared L2 distances (q, p) fp32; pad rows get +inf-ish distance."""
+    mode = _mode()
+    if mode == "jnp":
+        return ref.pairwise_sqdist_blas3_ref(x, y)
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    tq, tp, td = 256, 256, 512
+    xp, q = _pad_rows(x, tq)
+    yp, p = _pad_rows(y, tp)
+    xp = _pad_cols(xp, td)
+    yp = _pad_cols(yp, td)
+    out = _sqdist_padded(xp, yp, mode == "interpret")
+    out = out[:q, :p]
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _hamming_padded(x, y, interpret):
+    return pairwise_hamming_pallas(x, y, interpret=interpret)
+
+
+def pairwise_hamming(x, y) -> jnp.ndarray:
+    """Hamming distances between packed-uint32 bit rows -> (q, p) int32."""
+    mode = _mode()
+    if mode == "jnp":
+        return ref.pairwise_hamming_ref(x, y)
+    x = jnp.asarray(x, jnp.uint32)
+    y = jnp.asarray(y, jnp.uint32)
+    tq, tp, tw = 128, 128, 8
+    xp, q = _pad_rows(x, tq)
+    yp, p = _pad_rows(y, tp)
+    xp = _pad_cols(xp, tw)
+    yp = _pad_cols(yp, tw)
+    out = _hamming_padded(xp, yp, mode == "interpret")
+    return out[:q, :p]
+
+
+def eps_count(x, y, eps: float) -> jnp.ndarray:
+    """Per-query ε-neighbor counts against y (L2), fused (no (q,p) in HBM)."""
+    mode = _mode()
+    if mode == "jnp":
+        return ref.eps_count_ref(x, y, eps)
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    tq, tp = 256, 256
+    xp, q = _pad_rows(x, tq)
+    yp, p = _pad_rows(y, tp)
+    mask = (jnp.arange(yp.shape[0]) < p).astype(jnp.int32)
+    out = eps_count_pallas(xp, yp, mask, eps, interpret=(mode == "interpret"))
+    return out[:q]
+
+
+@jax.jit
+def rowwise_sqdist(x, y):
+    """Row-aligned squared L2: x (n, d), y (n, d) -> (n,) fp32."""
+    diff = x.astype(jnp.float32) - y.astype(jnp.float32)
+    return jnp.sum(diff * diff, axis=-1)
+
+
+@jax.jit
+def rowwise_hamming(x, y):
+    """Row-aligned Hamming over packed words -> (n,) int32."""
+    xor = jnp.bitwise_xor(x, y)
+    return jnp.sum(jax.lax.population_count(xor).astype(jnp.int32), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Metric dispatch used by the NNG core. Distances are "comparable" values:
+# squared L2 for euclidean (compare vs eps^2), raw counts for hamming.
+# ---------------------------------------------------------------------------
+
+class Metric:
+    """A metric with a batched comparable-distance matrix and threshold map."""
+
+    name: str
+
+    def cdist(self, x, y):  # comparable distances (monotone in true distance)
+        raise NotImplementedError
+
+    def comparable(self, eps: float) -> float:  # map true eps -> comparable
+        raise NotImplementedError
+
+    def true(self, c):  # comparable -> true distance (for radii arithmetic)
+        raise NotImplementedError
+
+
+class Euclidean(Metric):
+    name = "euclidean"
+
+    def cdist(self, x, y):
+        return pairwise_sqdist(x, y)
+
+    def rowwise(self, x, y):
+        return rowwise_sqdist(x, y)
+
+    def comparable(self, eps: float) -> float:
+        return float(eps) ** 2
+
+    def true(self, c):
+        return jnp.sqrt(jnp.maximum(jnp.asarray(c, jnp.float32), 0.0))
+
+
+class Hamming(Metric):
+    name = "hamming"
+
+    def cdist(self, x, y):
+        return pairwise_hamming(x, y).astype(jnp.float32)
+
+    def rowwise(self, x, y):
+        return rowwise_hamming(x, y).astype(jnp.float32)
+
+    def comparable(self, eps: float) -> float:
+        return float(eps)
+
+    def true(self, c):
+        return jnp.asarray(c, jnp.float32)
+
+
+METRICS = {"euclidean": Euclidean(), "hamming": Hamming()}
+
+
+def get_metric(name: str) -> Metric:
+    return METRICS[name]

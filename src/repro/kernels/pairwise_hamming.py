@@ -1,0 +1,65 @@
+"""Tiled pairwise Hamming distance Pallas kernel over packed bit words.
+
+Inputs are uint32 arrays of packed bits: x (q, w), y (p, w) with w words
+per point (w = ceil(bits / 32)). Output (q, p) int32 = popcount(x ^ y).
+
+There is no MXU path for XOR/popcount, so this is a VPU kernel: each grid
+step materializes a (TQ, TP, TW) XOR cube in VMEM and reduces it. With
+TQ=TP=128, TW=8: 128*128*8*4 B = 512 KiB working cube — VMEM-safe.
+The word dim is the innermost sequential grid axis, accumulating into the
+output block exactly like the L2 kernel's feature axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hamming_kernel(x_ref, y_ref, out_ref, *, nsteps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]  # (TQ, TW) uint32
+    y = y_ref[...]  # (TP, TW) uint32
+    xor = jnp.bitwise_xor(x[:, None, :], y[None, :, :])  # (TQ, TP, TW)
+    pc = jax.lax.population_count(xor).astype(jnp.int32)
+    out_ref[...] += jnp.sum(pc, axis=-1)
+
+
+def pairwise_hamming_pallas(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    *,
+    tq: int = 128,
+    tp: int = 128,
+    tw: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """(q, w) x (p, w) uint32 -> (q, p) int32. Caller pre-pads to tiles.
+
+    Padding words must be 0 in both operands (XOR of equal pads = 0 bits),
+    so word-dim padding never perturbs distances.
+    """
+    q, w = x.shape
+    p, _ = y.shape
+    assert q % tq == 0 and p % tp == 0 and w % tw == 0, (x.shape, y.shape)
+    nsteps = w // tw
+    grid = (q // tq, p // tp, nsteps)
+    kernel = functools.partial(_hamming_kernel, nsteps=nsteps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, tw), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tp, tw), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((tq, tp), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q, p), jnp.int32),
+        interpret=interpret,
+    )(x, y)

@@ -1,0 +1,81 @@
+"""ShapeDtypeStruct input specs for every (arch × shape) dry-run cell.
+
+No device allocation: parameters/optimizer/caches come from jax.eval_shape
+over the real init functions, inputs are ShapeDtypeStructs, and every spec
+is paired with its NamedSharding for the target mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.configs import SHAPES
+from repro.models import get_config, init_cache, init_params
+from repro.optim import adamw_init
+
+
+def arch_shape_cells():
+    """All 40 (arch, shape) cells with skip annotations."""
+    from repro.models import list_archs
+    cells = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            skip = None
+            if shape == "long_500k" and not cfg.subquadratic:
+                skip = "SKIP(full-attn)"
+            cells.append((arch, shape, skip))
+    return cells
+
+
+def input_specs(arch: str, shape_name: str, mesh):
+    """Returns (kind, specs, shardings) — pytrees of ShapeDtypeStruct and
+    NamedSharding for the jitted step's inputs."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    B, S = sh["global_batch"], sh["seq_len"]
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    params_shape = jax.eval_shape(
+        lambda k: init_params(cfg, k), key)
+    p_shard = shd.param_shardings(mesh, params_shape)
+
+    if kind == "train":
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        o_shard = shd.opt_shardings(mesh, opt_shape)
+        batch_shape = {"tokens": jax.ShapeDtypeStruct(
+            (B, S, cfg.n_codebooks) if cfg.family == "audio" else (B, S),
+            jnp.int32)}
+        if cfg.frontend == "vision":
+            batch_shape["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_prefix, cfg.frontend_dim), jnp.float32)
+        b_shard = shd.batch_shardings(mesh, batch_shape)
+        return kind, (params_shape, opt_shape, batch_shape), (
+            p_shard, o_shard, b_shard)
+
+    if kind == "prefill":
+        cache_shape = jax.eval_shape(
+            lambda: init_cache(cfg, B, S))
+        c_shard = shd.cache_shardings(mesh, cfg, cache_shape)
+        batch_shape = {"tokens": jax.ShapeDtypeStruct(
+            (B, S, cfg.n_codebooks) if cfg.family == "audio" else (B, S),
+            jnp.int32)}
+        if cfg.frontend == "vision":
+            batch_shape["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_prefix, cfg.frontend_dim), jnp.float32)
+        b_shard = shd.batch_shardings(mesh, batch_shape)
+        return kind, (params_shape, cache_shape, batch_shape), (
+            p_shard, c_shard, b_shard)
+
+    # decode: one new token against a seq_len KV cache / SSM state
+    cache_shape = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    c_shard = shd.cache_shardings(mesh, cfg, cache_shape)
+    tok_shape = jax.ShapeDtypeStruct(
+        (B, 1, cfg.n_codebooks) if cfg.family == "audio" else (B, 1),
+        jnp.int32)
+    t_shard = shd.batch_shardings(mesh, {"tokens": tok_shape})["tokens"]
+    idx_shape = jax.ShapeDtypeStruct((), jnp.int32)
+    return kind, (params_shape, cache_shape, tok_shape, idx_shape), (
+        p_shard, c_shard, t_shard, shd.replicated(mesh))

@@ -1,0 +1,87 @@
+"""End-to-end training driver (CPU-runnable at smoke scale; mesh-ready).
+
+Usage:
+  python -m repro.launch.train --arch glm4-9b --smoke --steps 200
+  python -m repro.launch.train --arch qwen2-7b --steps 1000 \
+      --batch 256 --seq 4096          # full config (TPU pod)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint
+from repro.data import TokenBatcher, synthetic_lm_batches
+from repro.ft import FTConfig, resilient_loop
+from repro.models import get_config, init_params
+from repro.optim import AdamWConfig, adamw_init
+from repro.train import TrainConfig, make_train_step
+from repro import sharding as shd
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    ocfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                       warmup_steps=max(args.steps // 20, 5))
+    tcfg = TrainConfig(microbatches=args.microbatches, optimizer=ocfg)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    opt_state = adamw_init(params)
+    step_fn_raw = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+
+    data = TokenBatcher(synthetic_lm_batches(
+        cfg, batch=args.batch, seq=args.seq, seed=args.seed))
+
+    losses = []
+
+    def step_fn(state, step):
+        params, opt_state = state
+        _, batch = next(data)
+        params, opt_state, metrics = step_fn_raw(params, opt_state, batch)
+        return (params, opt_state), metrics
+
+    t0 = time.time()
+
+    def on_metrics(step, metrics):
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"({(time.time()-t0):.1f}s)", flush=True)
+
+    ft = FTConfig(ckpt_dir=args.ckpt_dir or f"/tmp/repro_ckpt_{args.arch}",
+                  ckpt_every=args.ckpt_every)
+    state, last = resilient_loop(
+        state=(params, opt_state), step_fn=step_fn,
+        total_steps=args.steps, ft=ft, on_metrics=on_metrics)
+    if losses:
+        print(f"done at step {last}; loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    else:
+        print(f"done at step {last} (resumed past total_steps; no new steps)")
+    data.close()
+    return losses
+
+
+if __name__ == "__main__":
+    main()

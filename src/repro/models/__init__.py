@@ -1,0 +1,10 @@
+from .config import ModelConfig, get_config, list_archs, register  # noqa: F401
+from .transformer import (  # noqa: F401
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_count,
+    prefill,
+)

@@ -1,0 +1,102 @@
+"""Model configuration + architecture registry."""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    # attention details
+    head_dim: int | None = None         # defaults to d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_capacity: float = 1.25
+    expert_pad_to: int = 0   # pad expert WEIGHT count to a multiple (EP shard)
+    # SSM / hybrid (Mamba2 SSD & mLSTM share the SSD machinery)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    attn_every: int = 0                 # hybrid: shared-attn period
+    # modality frontends (stubs: precomputed embeddings)
+    frontend: str = "none"              # none | vision | audio
+    n_codebooks: int = 1                # audio (EnCodec streams)
+    n_prefix: int = 0                   # vision: patch-embedding prefix length
+    frontend_dim: int = 0               # stub embedding dim before projection
+    # capability flags
+    subquadratic: bool = False          # can run long_500k decode
+    tied_embeddings: bool = True
+    # numerics / perf knobs
+    dtype: str = "bfloat16"
+    remat: bool = True
+    attn_q_chunk: int = 2048
+    attn_kv_chunk: int = 2048
+    ssd_chunk: int = 256
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def d_inner(self) -> int:           # SSD inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def smoke(self) -> "ModelConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        return replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=2,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=max(1, min(self.n_kv_heads, 2)),
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab=256,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            ssm_state=16 if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_state else 64,
+            attn_every=2 if self.attn_every else 0,
+            n_prefix=4 if self.n_prefix else 0,
+            frontend_dim=32 if self.frontend_dim else 0,
+            attn_q_chunk=32,
+            attn_kv_chunk=32,
+            ssd_chunk=16,
+            dtype="float32",
+        )
+
+
+_REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if not _REGISTRY:
+        from repro import configs  # noqa: F401  (populates registry)
+    if name not in _REGISTRY:
+        from repro import configs  # noqa: F401
+    return _REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    from repro import configs  # noqa: F401
+    return sorted(_REGISTRY)

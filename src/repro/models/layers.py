@@ -1,0 +1,465 @@
+"""Model building blocks: GQA attention (blockwise/flash), SwiGLU, MoE with
+sort-based dispatch, and the SSD scan shared by Mamba2 and mLSTM blocks.
+
+All blocks take/return activations in ``cfg.dtype`` (bf16 on TPU) with fp32
+accumulation on every contraction (``preferred_element_type``); norms and
+softmax statistics run in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import constrain, dp_size, grad_cast, model_size
+
+F32 = jnp.float32
+
+
+def cdtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _w(p, name, x):
+    """Weight fetched in the activation compute dtype (bf16 on TPU).
+    Keeping master weights fp32 but casting at use means FSDP all-gathers
+    and TP partial sums move bf16, not fp32 — half the bytes. MXU still
+    accumulates fp32 via preferred_element_type."""
+    return p[name].astype(x.dtype)
+
+
+def rmsnorm(x, w, eps=1e-6):
+    xf = x.astype(F32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((xf * scale) * w.astype(F32)).astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """Rotary embedding. x: (..., s, h, hd); positions: (..., s)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    ang = positions[..., None].astype(F32) * freqs          # (..., s, half)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., s, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    b, s, hkv, hd = k.shape
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (b, s, hkv, n_rep, hd)
+    ).reshape(b, s, hkv * n_rep, hd)
+
+
+def _attend_chunk(q, k, v, mask, scale):
+    """One (q-chunk × kv-chunk) attention tile with fp32 softmax stats.
+
+    q: (b, sq, h, dh), k/v: (b, sk, h, dh), mask: (sq, sk) bool or None.
+    Returns (out_unnorm, m, l): running-softmax contributions.
+    """
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=F32) * scale
+    if mask is not None:
+        s = jnp.where(mask[None, None], s, -1e30)
+    m = jnp.max(s, axis=-1)                                  # (b, h, q)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                   preferred_element_type=F32)
+    return o, m, l
+
+
+def blockwise_attention(q, k, v, *, causal=True, q_chunk=2048, kv_chunk=2048):
+    """Memory-O(s·chunk) causal attention (online softmax, flash-style).
+
+    Per q-chunk, only the kv-chunks at or before it are visited (static
+    trip counts — no masked-out wasted FLOPs beyond the diagonal chunk).
+    q: (b, s, h, dh); k, v: (b, s, hkv, dh) already head-repeated by caller.
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / np.sqrt(dh)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    nq = (sq + q_chunk - 1) // q_chunk
+    outs = []
+    for qi in range(nq):
+        q0 = qi * q_chunk
+        qc = q[:, q0 : q0 + q_chunk]
+        sqc = qc.shape[1]
+        # kv range this q-chunk can see
+        hi = sk if not causal else min(sk, q0 + sqc)
+        nkv = (hi + kv_chunk - 1) // kv_chunk
+        acc = jnp.zeros((b, sqc, h, dh), F32)
+        m_run = jnp.full((b, h, sqc), -1e30, F32)
+        l_run = jnp.zeros((b, h, sqc), F32)
+        for kj in range(nkv):
+            k0 = kj * kv_chunk
+            kc = k[:, k0 : k0 + min(kv_chunk, hi - k0)]
+            vc = v[:, k0 : k0 + min(kv_chunk, hi - k0)]
+            if causal and k0 + kc.shape[1] > q0:
+                qpos = q0 + jnp.arange(sqc)
+                kpos = k0 + jnp.arange(kc.shape[1])
+                mask = qpos[:, None] >= kpos[None, :]
+            else:
+                mask = None
+            o, m, l = _attend_chunk(qc, kc, vc, mask, scale)
+            m_new = jnp.maximum(m_run, m)
+            alpha = jnp.exp(m_run - m_new)
+            beta = jnp.exp(m - m_new)
+            acc = acc * alpha.transpose(0, 2, 1)[..., None] \
+                + o * beta.transpose(0, 2, 1)[..., None]
+            l_run = l_run * alpha + l * beta
+            m_run = m_new
+        outs.append(acc / l_run.transpose(0, 2, 1)[..., None])
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def attention_block(p, x, cfg, positions, cache=None, cache_index=None):
+    """Pre-norm GQA attention. cache: dict(k, v) of (b, s_max, hkv, hd);
+    cache_index: scalar write offset for decode. Returns (y, new_cache)."""
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    xn = rmsnorm(x, p["ln"])
+    # projections in compute dtype: cross-shard partial sums and stored
+    # activations move bf16 (TPU MXU accumulates fp32 internally regardless)
+    q = grad_cast(jnp.einsum("bsd,dhk->bshk", xn, _w(p, "wq", x)))
+    k = grad_cast(jnp.einsum("bsd,dhk->bshk", xn, _w(p, "wk", x)))
+    v = grad_cast(jnp.einsum("bsd,dhk->bshk", xn, _w(p, "wv", x)))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = constrain(rope(q, positions, cfg.rope_theta), "dp", None, "model", None)
+    k = constrain(rope(k, positions, cfg.rope_theta), "dp", None, "model", None)
+    v = constrain(v, "dp", None, "model", None)
+
+    new_cache = None
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        s_max = ck.shape[1]
+        kk = _repeat_kv(ck.astype(x.dtype), h // hkv)
+        vv = _repeat_kv(cv.astype(x.dtype), h // hkv)
+        scale = 1.0 / np.sqrt(hd)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                         preferred_element_type=F32) * scale
+        kpos = jnp.arange(s_max)
+        qpos = cache_index + jnp.arange(s)
+        valid = kpos[None, :] <= qpos[:, None]              # (s, s_max) causal
+        att = jnp.where(valid[None, None, :, :], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, vv,
+                       preferred_element_type=F32).astype(x.dtype)
+    else:
+        kk = _repeat_kv(k, h // hkv)
+        vv = _repeat_kv(v, h // hkv)
+        o = blockwise_attention(
+            q, kk, vv, causal=True,
+            q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk)
+    o = constrain(o, "dp", None, "model", None)
+    y = jnp.einsum("bshk,hkd->bsd", o, _w(p, "wo", x))
+    return x + constrain(y, "dp", None, None), new_cache
+
+
+def swiglu_block(p, x, cfg):
+    xn = rmsnorm(x, p["ln"])
+    g = grad_cast(jnp.einsum("bsd,df->bsf", xn, _w(p, "wg", x)))
+    u = grad_cast(jnp.einsum("bsd,df->bsf", xn, _w(p, "wu", x)))
+    hcand = constrain(
+        (jax.nn.silu(g.astype(F32)) * u.astype(F32)).astype(x.dtype),
+        "dp", None, "model")
+    y = jnp.einsum("bsf,fd->bsd", hcand, _w(p, "wd", x))
+    return x + constrain(y, "dp", None, None)
+
+
+def moe_block(p, x, cfg, dropless=False):
+    """Top-k MoE with sort-based dispatch into (E, C) capacity buffers.
+
+    Static-shape, no host control flow: tokens sort by expert, position
+    within expert via searchsorted, overflow drops (capacity factor knob).
+    ``dropless=True`` (decode path) sizes C = T*K so no token ever drops.
+    Experts shard over the `model` mesh axis (EP); the dispatch is pure
+    gather/scatter — no all-to-all needed when every device holds its
+    experts' full d_model slice.
+    """
+    b, s, d = x.shape
+    T = b * s
+    E, K = cfg.n_experts, cfg.top_k
+    Ep = p["wg"].shape[0]           # padded expert count (EP divisibility)
+    C = T * K if dropless else max(1, int(T * K / E * cfg.moe_capacity))
+    ndp = dp_size()
+    # the dp-local dispatch only pays off when the expert dim actually
+    # shards over the model axis (EP); otherwise (e.g. grok's 8 experts on a
+    # 16-way axis) the global dispatch + TP-in-expert weights is faster
+    if (not dropless and ndp > 1 and b % ndp == 0
+            and Ep % model_size() == 0):
+        return _moe_block_sharded(p, x, cfg, Ep, ndp)
+    xn = rmsnorm(x, p["ln"]).reshape(T, d)
+    logits = jnp.einsum("td,de->te", xn, _w(p, "router", xn),
+                        preferred_element_type=F32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, K)                  # (T, K)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+    fe = expert.reshape(-1)                                 # (T*K,)
+    ftok = jnp.repeat(jnp.arange(T), K)
+    fgate = gate.reshape(-1)
+    order = jnp.argsort(fe)
+    se, st, sg = fe[order], ftok[order], fgate[order]
+    pos = jnp.arange(T * K) - jnp.searchsorted(se, se, side="left")
+    keep = pos < C
+    slot = jnp.where(keep, se * C + pos, Ep * C)            # trash slot
+    buf = jnp.zeros((Ep * C + 1, d), xn.dtype).at[slot].set(xn[st])
+    hbuf = constrain(buf[: Ep * C].reshape(Ep, C, d), "model", None, None)
+    g = jnp.einsum("ecd,edf->ecf", hbuf, p["wg"],
+                   preferred_element_type=F32)
+    u = jnp.einsum("ecd,edf->ecf", hbuf, p["wu"],
+                   preferred_element_type=F32)
+    hh = constrain(
+        (jax.nn.silu(g.astype(F32)) * u.astype(F32)).astype(x.dtype),
+        "model", None, None)
+    out = jnp.einsum("ecf,efd->ecd", hh, p["wd"],
+                     preferred_element_type=F32).reshape(Ep * C, d)
+    y = jnp.zeros((T, d), F32).at[st].add(
+        jnp.where(keep[:, None], out[jnp.minimum(slot, Ep * C - 1)], 0.0)
+        * sg[:, None])
+    y = constrain(y.reshape(b, s, d).astype(x.dtype), "dp", None, None)
+    aux = _load_balance_loss(probs, expert, E)
+    return x + y, aux
+
+
+def _moe_block_sharded(p, x, cfg, Ep, ndp):
+    """DP-shard-local MoE dispatch + explicit EP all-to-all.
+
+    The global-argsort dispatch cannot shard (token->slot indices cross dp
+    shards), forcing GSPMD to replicate the (T, d) scatter — measured as a
+    4.4e12-byte all-reduce on granite-moe. Here routing, sort and packing
+    happen independently per dp shard (leading dp axis sharded, everything
+    batched under it => local), and the only cross-device movement is the
+    canonical EP exchange: (ndp, E, C_loc, d) -> (E, ndp*C_loc, d), which
+    GSPMD lowers to an all-to-all between the dp and model axes.
+    """
+    b, s, d = x.shape
+    T = b * s
+    E, K = cfg.n_experts, cfg.top_k
+    Tl = T // ndp
+    Cl = max(1, int(Tl * K / E * cfg.moe_capacity))
+    xn = rmsnorm(x, p["ln"]).reshape(ndp, Tl, d)
+    xn = constrain(xn, "dp", None, None)
+    logits = jnp.einsum("gtd,de->gte", xn, _w(p, "router", xn),
+                        preferred_element_type=F32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, K)                  # (g, Tl, K)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+    fe = expert.reshape(ndp, Tl * K)
+    ftok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tl), K)[None], (ndp, Tl * K))
+    fgate = gate.reshape(ndp, Tl * K)
+    order = jnp.argsort(fe, axis=1)
+    se = jnp.take_along_axis(fe, order, axis=1)
+    st = jnp.take_along_axis(ftok, order, axis=1)
+    sg = jnp.take_along_axis(fgate, order, axis=1)
+    pos = jnp.arange(Tl * K)[None] - jax.vmap(
+        lambda a: jnp.searchsorted(a, a, side="left"))(se)
+    keep = pos < Cl
+    slot = jnp.where(keep, se * Cl + pos, Ep * Cl)          # trash slot
+    gidx = jnp.broadcast_to(jnp.arange(ndp)[:, None], slot.shape)
+    buf = jnp.zeros((ndp, Ep * Cl + 1, d), xn.dtype)
+    buf = buf.at[gidx, slot].set(
+        jnp.take_along_axis(xn, st[..., None], axis=1))
+    hb = buf[:, : Ep * Cl].reshape(ndp, Ep, Cl, d)
+    # EP exchange: tokens regroup by expert, experts shard over model
+    hb = constrain(hb.transpose(1, 0, 2, 3).reshape(Ep, ndp * Cl, d),
+                   "model", None, None)
+    g = jnp.einsum("ecd,edf->ecf", hb, _w(p, "wg", x))
+    u = jnp.einsum("ecd,edf->ecf", hb, _w(p, "wu", x))
+    hh = constrain(
+        (jax.nn.silu(g.astype(F32)) * u.astype(F32)).astype(x.dtype),
+        "model", None, None)
+    out = jnp.einsum("ecf,efd->ecd", hh, _w(p, "wd", x))
+    # return exchange: back to dp-local layout
+    out = constrain(
+        out.reshape(Ep, ndp, Cl, d).transpose(1, 0, 2, 3).reshape(
+            ndp, Ep * Cl, d), "dp", None, None)
+    out = jnp.concatenate(
+        [out, jnp.zeros((ndp, 1, d), out.dtype)], axis=1)   # trash row
+    picked = out[gidx, jnp.minimum(slot, Ep * Cl)]
+    y = jnp.zeros((ndp, Tl, d), F32).at[gidx, st].add(
+        jnp.where(keep[..., None], picked, 0.0) * sg[..., None])
+    y = constrain(y.reshape(b, s, d).astype(x.dtype), "dp", None, None)
+    aux = _load_balance_loss(probs.reshape(T, E), expert.reshape(T, K), E)
+    return x + y, aux
+
+
+def _load_balance_loss(probs, expert, E):
+    """Switch-style auxiliary load-balancing loss."""
+    T = probs.shape[0]
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros(E, F32).at[expert.reshape(-1)].add(1.0) / (T * expert.shape[1])
+    return E * jnp.sum(me * ce)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan (Mamba-2 / mLSTM chunked state-space dual form)
+# ---------------------------------------------------------------------------
+
+def ssd_scan(a, B, C, X, chunk: int, state=None):
+    """Chunked linear-recurrence scan  S_t = a_t S_{t-1} + B_t ⊗ X_t,
+    Y_t = C_t · S_t — the Mamba-2 SSD algorithm (matmul form, MXU-friendly).
+
+    a: (b, s, h) decay in (0, 1];  B, C: (b, s, h, n);  X: (b, s, h, p).
+    Returns (Y (b, s, h, p), S_final (b, h, n, p)).
+    """
+    b, s, h = a.shape
+    n = B.shape[-1]
+    p = X.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        # identity-pad the recurrence: a=1 (no decay), B=X=0 (no injection)
+        a = jnp.concatenate([a, jnp.ones((b, pad, h), a.dtype)], axis=1)
+        zB = jnp.zeros((b, pad) + B.shape[2:], B.dtype)
+        zC = jnp.zeros((b, pad) + C.shape[2:], C.dtype)
+        zX = jnp.zeros((b, pad) + X.shape[2:], X.dtype)
+        B = jnp.concatenate([B, zB], axis=1)
+        C = jnp.concatenate([C, zC], axis=1)
+        X = jnp.concatenate([X, zX], axis=1)
+    s_pad = s + pad
+    nc = s_pad // chunk
+    la = jnp.log(jnp.maximum(a.astype(F32), 1e-30))
+    # reshape into chunks
+    rs = lambda t: t.reshape((b, nc, chunk) + t.shape[2:])
+    lac = jnp.cumsum(rs(la), axis=2)                        # (b, nc, L, h)
+    Bc, Cc, Xc = rs(B), rs(C), rs(X)
+
+    # intra-chunk: M[t,u] = (C_t·B_u) * exp(la_t - la_u), u <= t
+    dt = lac[:, :, :, None, :] - lac[:, :, None, :, :]      # (b,nc,L,L,h)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(dt), 0.0)
+    cb = jnp.einsum("bclhn,bcuhn->bcluh", Cc, Bc, preferred_element_type=F32)
+    M = cb * decay
+    Y_intra = jnp.einsum("bcluh,bcuhp->bclhp", M.astype(X.dtype), Xc,
+                         preferred_element_type=F32)
+
+    # inter-chunk: scan over chunk states
+    # chunk state contribution: Z_c = sum_u exp(la_L - la_u) B_u X_u
+    dl = lac[:, :, -1:, :] - lac                            # (b, nc, L, h)
+    Bd = (Bc.astype(F32) * jnp.exp(dl)[..., None]).astype(X.dtype)
+    Z = jnp.einsum("bcuhn,bcuhp->bchnp", Bd, Xc, preferred_element_type=F32)
+    Adec = jnp.exp(lac[:, :, -1, :])                        # (b, nc, h)
+
+    S0 = (jnp.zeros((b, h, n, p), F32) if state is None
+          else state.astype(F32))
+
+    def step(S, inp):
+        z, ad = inp                                          # (b,h,n,p),(b,h)
+        S_in = S
+        S = S * ad[..., None, None] + z
+        return S, S_in
+
+    (S_fin, S_ins) = jax.lax.scan(
+        step, S0, (Z.transpose(1, 0, 2, 3, 4), Adec.transpose(1, 0, 2)))
+    S_ins = S_ins.transpose(1, 0, 2, 3, 4)                  # (b, nc, h, n, p)
+    Y_inter = jnp.einsum(
+        "bclhn,bchnp->bclhp",
+        (Cc.astype(F32) * jnp.exp(lac)[..., None]).astype(X.dtype),
+        S_ins.astype(X.dtype), preferred_element_type=F32)
+    Y = (Y_intra + Y_inter).reshape(b, s_pad, h, p)[:, :s]
+    return Y, S_fin
+
+
+def ssd_decode_step(a, B, C, X, state):
+    """Single-token recurrence: S = a S + B⊗X; Y = C·S. Shapes as ssd_scan
+    with s=1."""
+    af = a[:, 0].astype(F32)                                # (b, h)
+    S = state * af[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", B[:, 0].astype(F32), X[:, 0].astype(F32))
+    Y = jnp.einsum("bhn,bhnp->bhp", C[:, 0].astype(F32), S)
+    return Y[:, None], S
+
+
+def mamba2_block(p, x, cfg, state=None, decode=False):
+    """Mamba-2 block (SSD form). state: dict(conv (b, 3, d_in), ssd (b,h,n,p))."""
+    b, s, d = x.shape
+    din, nh, hd, ns = cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xn = rmsnorm(x, p["ln"])
+    proj = constrain(jnp.einsum("bsd,dk->bsk", xn, _w(p, "in_proj", x)),
+                     "dp", None, None)
+    z, xs, Braw, Craw, dt = jnp.split(
+        proj, [din, 2 * din, 2 * din + ns, 2 * din + 2 * ns], axis=-1)
+    # causal depthwise conv (kernel 4) over xs
+    K = p["conv"].shape[0]                                  # (K, din)
+    if decode:
+        prev = state["conv"]                                # (b, K-1, din)
+        xs_full = jnp.concatenate([prev, xs], axis=1)
+        new_conv = xs_full[:, -(K - 1):]
+    else:
+        xs_full = jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))
+        new_conv = xs_full[:, -(K - 1):]
+    xs_c = _causal_conv(xs_full, p["conv"], s)
+    xs_c = jax.nn.silu(xs_c.astype(F32)).astype(x.dtype)
+
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])     # (b, s, nh)
+    a = jnp.exp(-dt * jnp.exp(p["A_log"]))                  # (b, s, nh)
+    Xh = xs_c.reshape(b, s, nh, hd)
+    dtX = (Xh.astype(F32) * dt[..., None]).astype(x.dtype)
+    Bh = jnp.broadcast_to(Braw[:, :, None, :], (b, s, nh, ns))
+    Ch = jnp.broadcast_to(Craw[:, :, None, :], (b, s, nh, ns))
+    if decode:
+        Y, S = ssd_decode_step(a, Bh, Ch, dtX, state["ssd"])
+    else:
+        Y, S = ssd_scan(a, Bh, Ch, dtX, cfg.ssd_chunk,
+                        None if state is None else state["ssd"])
+    Y = Y + Xh.astype(F32) * p["D_skip"][None, None, :, None]
+    Y = (Y.reshape(b, s, din) * jax.nn.silu(z.astype(F32))).astype(x.dtype)
+    Y = constrain(Y, "dp", None, "model")
+    y = jnp.einsum("bsk,kd->bsd", Y, _w(p, "out_proj", x))
+    return x + constrain(y, "dp", None, None), {"conv": new_conv, "ssd": S}
+
+
+def _causal_conv(xs_full, w, s_out):
+    """Depthwise causal conv. xs_full: (b, s+K-1, din); w: (K, din)."""
+    K = w.shape[0]
+    return sum(xs_full[:, i : i + s_out] * w[i][None, None, :]
+               for i in range(K))
+
+
+def mlstm_block(p, x, cfg, state=None, decode=False):
+    """mLSTM (xLSTM matrix-memory) block via the SSD scan: a = forget gate,
+    B = i·k, C = q, X = [v ; 1] (the appended ones-row carries the
+    normalizer n_t so one scan yields both numerator and denominator)."""
+    b, s, d = x.shape
+    nh, hd = cfg.n_heads, cfg.hd
+    xn = rmsnorm(x, p["ln"])
+    q = jnp.einsum("bsd,dhk->bshk", xn, _w(p, "wq", x), preferred_element_type=F32)
+    k = jnp.einsum("bsd,dhk->bshk", xn, _w(p, "wk", x), preferred_element_type=F32)
+    v = jnp.einsum("bsd,dhk->bshk", xn, _w(p, "wv", x), preferred_element_type=F32)
+    k = k / np.sqrt(hd)
+    fgate = jax.nn.sigmoid(
+        jnp.einsum("bsd,dh->bsh", xn, _w(p, "wf", x), preferred_element_type=F32)
+        + p["bf"])                                          # (b, s, nh)
+    igate = jnp.exp(-jax.nn.softplus(
+        -(jnp.einsum("bsd,dh->bsh", xn, _w(p, "wi", x), preferred_element_type=F32)
+          + p["bi"])))                                      # sigmoid, stable
+    Bh = (k * igate[..., None]).astype(x.dtype)
+    Ch = q.astype(x.dtype)
+    ones = jnp.ones((b, s, nh, 1), x.dtype)
+    Xh = jnp.concatenate([v.astype(x.dtype), ones], axis=-1)  # (b,s,nh,hd+1)
+    if decode:
+        Y, S = ssd_decode_step(fgate, Bh, Ch, Xh, state)
+    else:
+        Y, S = ssd_scan(fgate, Bh, Ch, Xh, cfg.ssd_chunk, state)
+    num, den = Y[..., :hd], Y[..., hd:]
+    out = num / jnp.maximum(jnp.abs(den), 1.0)
+    out = constrain(out.astype(x.dtype), "dp", None, None, "model")
+    y = jnp.einsum("bshk,hkd->bsd", out, _w(p, "wo", x))
+    return x + constrain(y, "dp", None, None), S

@@ -1,0 +1,436 @@
+"""Model assembly: init / train forward / prefill / decode for all families.
+
+Layers are stacked on a leading axis and scanned (small HLO, fast compile,
+remat per layer). Hybrid (zamba2-style) models scan "super-layers" of
+``attn_every`` SSD blocks followed by one application of a SHARED attention
+block (weights reused, per-application KV cache).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .config import ModelConfig
+from repro.sharding import constrain
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _norm(key, shape, scale):
+    return (jax.random.normal(key, shape, F32) * scale).astype(F32)
+
+
+def _init_attn(key, cfg: ModelConfig):
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    s_in = 1.0 / np.sqrt(d)
+    s_out = 1.0 / np.sqrt(h * hd) / np.sqrt(2 * cfg.n_layers)
+    p = {
+        "ln": jnp.ones((d,), F32),
+        "wq": _norm(ks[0], (d, h, hd), s_in),
+        "wk": _norm(ks[1], (d, hkv, hd), s_in),
+        "wv": _norm(ks[2], (d, hkv, hd), s_in),
+        "wo": _norm(ks[3], (h, hd, d), s_out),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), F32)
+        p["bk"] = jnp.zeros((hkv, hd), F32)
+        p["bv"] = jnp.zeros((hkv, hd), F32)
+    return p
+
+
+def _init_mlp(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": jnp.ones((d,), F32),
+        "wg": _norm(ks[0], (d, f), 1.0 / np.sqrt(d)),
+        "wu": _norm(ks[1], (d, f), 1.0 / np.sqrt(d)),
+        "wd": _norm(ks[2], (f, d), 1.0 / np.sqrt(f) / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _init_moe(key, cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ep = e
+    if cfg.expert_pad_to:
+        ep = ((e + cfg.expert_pad_to - 1) // cfg.expert_pad_to
+              ) * cfg.expert_pad_to
+    ks = jax.random.split(key, 4)
+    # router stays at the TRUE expert count; padded experts are dead weights
+    # that exist only so the expert dim divides the model mesh axis (EP).
+    return {
+        "ln": jnp.ones((d,), F32),
+        "router": _norm(ks[0], (d, e), 1.0 / np.sqrt(d)),
+        "wg": _norm(ks[1], (ep, d, f), 1.0 / np.sqrt(d)),
+        "wu": _norm(ks[2], (ep, d, f), 1.0 / np.sqrt(d)),
+        "wd": _norm(ks[3], (ep, f, d), 1.0 / np.sqrt(f) / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _init_ssd(key, cfg):
+    d, din, ns, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    ks = jax.random.split(key, 3)
+    proj_out = 2 * din + 2 * ns + nh
+    return {
+        "ln": jnp.ones((d,), F32),
+        "in_proj": _norm(ks[0], (d, proj_out), 1.0 / np.sqrt(d)),
+        "conv": _norm(ks[1], (4, din), 0.2),
+        "dt_bias": jnp.zeros((nh,), F32),
+        "A_log": jnp.zeros((nh,), F32),
+        "D_skip": jnp.ones((nh,), F32),
+        "out_proj": _norm(ks[2], (din, d), 1.0 / np.sqrt(din) / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _init_mlstm(key, cfg):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": jnp.ones((d,), F32),
+        "wq": _norm(ks[0], (d, h, hd), 1.0 / np.sqrt(d)),
+        "wk": _norm(ks[1], (d, h, hd), 1.0 / np.sqrt(d)),
+        "wv": _norm(ks[2], (d, h, hd), 1.0 / np.sqrt(d)),
+        "wo": _norm(ks[3], (h, hd, d), 1.0 / np.sqrt(h * hd) / np.sqrt(2 * cfg.n_layers)),
+        "wf": _norm(ks[4], (d, h), 1.0 / np.sqrt(d)),
+        "bf": jnp.full((h,), 3.0, F32),   # bias toward remembering
+        "wi": _norm(ks[5], (d, h), 1.0 / np.sqrt(d)),
+        "bi": jnp.zeros((h,), F32),
+    }
+
+
+def _stack(init_fn, key, n, cfg):
+    return jax.vmap(lambda k: init_fn(k, cfg))(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    p = {"final_ln": jnp.ones((cfg.d_model,), F32)}
+    if cfg.family == "audio":
+        p["embed"] = _norm(ks[0], (cfg.n_codebooks, cfg.vocab, cfg.d_model), 0.02)
+        p["head"] = _norm(ks[1], (cfg.n_codebooks, cfg.d_model, cfg.vocab),
+                          1.0 / np.sqrt(cfg.d_model))
+    else:
+        p["embed"] = _norm(ks[0], (cfg.vocab, cfg.d_model), 0.02)
+        if not cfg.tied_embeddings:
+            p["head"] = _norm(ks[1], (cfg.d_model, cfg.vocab),
+                              1.0 / np.sqrt(cfg.d_model))
+    if cfg.frontend == "vision":
+        p["frontend_proj"] = _norm(ks[2], (cfg.frontend_dim, cfg.d_model),
+                                   1.0 / np.sqrt(cfg.frontend_dim))
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio"):
+        p["layers"] = {
+            "attn": _stack(_init_attn, ks[3], cfg.n_layers, cfg),
+            "mlp": _stack(_init_mlp, ks[4], cfg.n_layers, cfg),
+        }
+    elif fam == "moe":
+        p["layers"] = {
+            "attn": _stack(_init_attn, ks[3], cfg.n_layers, cfg),
+            "moe": _stack(_init_moe, ks[4], cfg.n_layers, cfg),
+        }
+    elif fam == "ssm":
+        p["layers"] = {"mlstm": _stack(_init_mlstm, ks[3], cfg.n_layers, cfg)}
+    elif fam == "hybrid":
+        n_super, trail = divmod(cfg.n_layers, cfg.attn_every)
+        inner = jax.vmap(lambda k: _stack(_init_ssd, k, cfg.attn_every, cfg))(
+            jax.random.split(ks[3], n_super))
+        p["layers"] = {"ssd_super": inner}
+        if trail:
+            p["layers"]["ssd_trail"] = _stack(_init_ssd, ks[5], trail, cfg)
+        p["shared_attn"] = _init_attn(ks[6], cfg)
+        if cfg.d_ff:
+            p["shared_mlp"] = _init_mlp(ks[7], cfg)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill without cache)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg, batch):
+    dt = L.cdtype(cfg)
+    tokens = batch["tokens"]
+    if cfg.family == "audio":
+        # (b, s, nc) EnCodec streams: sum per-codebook embeddings
+        x = sum(
+            params["embed"][c][tokens[..., c]] for c in range(cfg.n_codebooks)
+        ).astype(dt)
+    else:
+        x = params["embed"][tokens].astype(dt)
+    if cfg.frontend == "vision":
+        pe = batch["patch_embeds"].astype(dt)                # (b, npfx, fd)
+        proj = jnp.einsum("bpf,fd->bpd", pe, params["frontend_proj"].astype(dt))
+        x = jnp.concatenate([proj, x[:, cfg.n_prefix:]], axis=1)
+    return constrain(x, "dp", None, None)
+
+
+def _logits(params, cfg, x):
+    x = constrain(L.rmsnorm(x, params["final_ln"]), "dp", None, None)
+    if cfg.family == "audio":
+        return constrain(
+            jnp.einsum("bsd,cdv->bscv", x, params["head"].astype(x.dtype),
+                       preferred_element_type=F32), "dp", None, None, "model")
+    w = (params["embed"].T if cfg.tied_embeddings else params["head"])
+    return constrain(
+        jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype),
+                   preferred_element_type=F32), "dp", None, "model")
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def forward(params, cfg: ModelConfig, batch):
+    """Full-sequence forward. Returns (logits fp32, aux dict)."""
+    x = _embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    aux = {"moe_loss": jnp.float32(0.0)}
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "audio"):
+        def layer(x, lp):
+            x, _ = L.attention_block(lp["attn"], x, cfg, positions)
+            x = L.swiglu_block(lp["mlp"], x, cfg)
+            return x, ()
+        x, _ = jax.lax.scan(_maybe_remat(layer, cfg), x, params["layers"])
+    elif fam == "moe":
+        def layer(carry, lp):
+            x, mloss = carry
+            x, _ = L.attention_block(lp["attn"], x, cfg, positions)
+            x, aux_l = L.moe_block(lp["moe"], x, cfg)
+            return (x, mloss + aux_l), ()
+        (x, mloss), _ = jax.lax.scan(
+            _maybe_remat(layer, cfg), (x, jnp.float32(0.0)), params["layers"])
+        aux["moe_loss"] = mloss / cfg.n_layers
+    elif fam == "ssm":
+        def layer(x, lp):
+            x, _ = L.mlstm_block(lp, x, cfg)
+            return x, ()
+        x, _ = jax.lax.scan(_maybe_remat(layer, cfg),
+                            x, params["layers"]["mlstm"])
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+        shared_mlp = params.get("shared_mlp")
+
+        def inner(x, lp):
+            x, _ = L.mamba2_block(lp, x, cfg)
+            return x, ()
+
+        def super_layer(x, slp):
+            x, _ = jax.lax.scan(_maybe_remat(inner, cfg), x, slp)
+            x, _ = L.attention_block(shared, x, cfg, positions)
+            if shared_mlp is not None:
+                x = L.swiglu_block(shared_mlp, x, cfg)
+            return x, ()
+        x, _ = jax.lax.scan(super_layer, x, params["layers"]["ssd_super"])
+        if "ssd_trail" in params["layers"]:
+            x, _ = jax.lax.scan(_maybe_remat(inner, cfg),
+                                x, params["layers"]["ssd_trail"])
+    else:
+        raise ValueError(fam)
+
+    return _logits(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Next-token cross-entropy (fp32), mean over non-pad positions."""
+    logits, aux = forward(params, cfg, batch)
+    tokens = batch["tokens"]
+    if cfg.family == "audio":
+        labels = tokens[:, 1:]                              # (b, s-1, nc)
+        lg = logits[:, :-1]                                 # (b, s-1, nc, v)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(lse - ll)
+    else:
+        labels = tokens[:, 1:]
+        lg = logits[:, :-1]
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+        mask = jnp.ones_like(labels, F32)
+        if cfg.frontend == "vision":                        # don't train on patches
+            mask = mask.at[:, : cfg.n_prefix].set(0.0)
+        ce = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + 0.01 * aux["moe_loss"], {"ce": ce, **aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> dict:
+    """KV / SSM state caches, stacked per scanned layer group (bf16 KV)."""
+    dt = L.cdtype(cfg)
+    b = batch_size
+    fam = cfg.family
+
+    def attn_cache(n):
+        return {
+            "k": jnp.zeros((n, b, max_len, cfg.n_kv_heads, cfg.hd), dt),
+            "v": jnp.zeros((n, b, max_len, cfg.n_kv_heads, cfg.hd), dt),
+        }
+
+    if fam in ("dense", "vlm", "audio", "moe"):
+        return {"attn": attn_cache(cfg.n_layers)}
+    if fam == "ssm":
+        return {"mlstm": jnp.zeros(
+            (cfg.n_layers, b, cfg.n_heads, cfg.hd, cfg.hd + 1), F32)}
+    if fam == "hybrid":
+        n_super, trail = divmod(cfg.n_layers, cfg.attn_every)
+        c = {
+            "ssd_super": {
+                "conv": jnp.zeros((n_super, cfg.attn_every, b, 3, cfg.d_inner), dt),
+                "ssd": jnp.zeros((n_super, cfg.attn_every, b, cfg.n_ssm_heads,
+                                  cfg.ssm_state, cfg.ssm_head_dim), F32),
+            },
+            "attn": attn_cache(n_super),   # per shared-attn application
+        }
+        if trail:
+            c["ssd_trail"] = {
+                "conv": jnp.zeros((trail, b, 3, cfg.d_inner), dt),
+                "ssd": jnp.zeros((trail, b, cfg.n_ssm_heads,
+                                  cfg.ssm_state, cfg.ssm_head_dim), F32),
+            }
+        return c
+    raise ValueError(fam)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, index, patch_embeds=None):
+    """One-token decode. tokens: (b, 1) (or (b, 1, nc) audio); index: scalar
+    position of this token. Returns (logits (b, 1, ...), new_cache)."""
+    batch = {"tokens": tokens}
+    if patch_embeds is not None:
+        batch["patch_embeds"] = patch_embeds
+    dt = L.cdtype(cfg)
+    if cfg.family == "audio":
+        x = sum(params["embed"][c][tokens[..., c]]
+                for c in range(cfg.n_codebooks)).astype(dt)
+    else:
+        x = params["embed"][tokens].astype(dt)
+    positions = jnp.arange(1)[None, :] + index
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "audio", "moe"):
+        def layer(x, scanned):
+            lp, c = scanned
+            x, nc = L.attention_block(lp["attn"], x, cfg, positions,
+                                      cache=c, cache_index=index)
+            if fam == "moe":
+                x, _ = L.moe_block(lp["moe"], x, cfg, dropless=True)
+            else:
+                x = L.swiglu_block(lp["mlp"], x, cfg)
+            return x, nc
+        x, new_attn = jax.lax.scan(layer, x, (params["layers"], cache["attn"]))
+        new_cache = {"attn": new_attn}
+    elif fam == "ssm":
+        def layer(x, scanned):
+            lp, st = scanned
+            x, ns = L.mlstm_block(lp, x, cfg, state=st, decode=True)
+            return x, ns
+        x, ns = jax.lax.scan(layer, x, (params["layers"]["mlstm"],
+                                        cache["mlstm"]))
+        new_cache = {"mlstm": ns}
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+        shared_mlp = params.get("shared_mlp")
+
+        def inner(x, scanned):
+            lp, st = scanned
+            x, ns = L.mamba2_block(lp, x, cfg, state=st, decode=True)
+            return x, ns
+
+        def super_layer(x, scanned):
+            slp, sst, ac = scanned
+            x, ns = jax.lax.scan(inner, x, (slp, sst))
+            x, nac = L.attention_block(shared, x, cfg, positions,
+                                       cache=ac, cache_index=index)
+            if shared_mlp is not None:
+                x = L.swiglu_block(shared_mlp, x, cfg)
+            return x, (ns, nac)
+        x, (nss, nattn) = jax.lax.scan(
+            super_layer, x,
+            (params["layers"]["ssd_super"], cache["ssd_super"], cache["attn"]))
+        new_cache = {"ssd_super": nss, "attn": nattn}
+        if "ssd_trail" in params["layers"]:
+            x, nt = jax.lax.scan(
+                inner, x, (params["layers"]["ssd_trail"], cache["ssd_trail"]))
+            new_cache["ssd_trail"] = nt
+    else:
+        raise ValueError(fam)
+
+    return _logits(params, cfg, x), new_cache
+
+
+def prefill(params, cfg: ModelConfig, cache, batch):
+    """Prefill: full-sequence forward that also fills the caches (used by the
+    serving path for prompt ingestion). Returns (logits, cache)."""
+    x = _embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio", "moe"):
+        def layer(x, scanned):
+            lp, c = scanned
+            x, nc = L.attention_block(lp["attn"], x, cfg, positions,
+                                      cache=c, cache_index=0)
+            if fam == "moe":
+                x, _ = L.moe_block(lp["moe"], x, cfg)
+            else:
+                x = L.swiglu_block(lp["mlp"], x, cfg)
+            return x, nc
+        x, new_attn = jax.lax.scan(layer, x, (params["layers"], cache["attn"]))
+        new_cache = {"attn": new_attn}
+    elif fam == "ssm":
+        def layer(x, scanned):
+            lp, st = scanned
+            x, ns = L.mlstm_block(lp, x, cfg, state=st)
+            return x, ns
+        x, ns = jax.lax.scan(layer, x,
+                             (params["layers"]["mlstm"], cache["mlstm"]))
+        new_cache = {"mlstm": ns}
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+        shared_mlp = params.get("shared_mlp")
+
+        def inner(x, scanned):
+            lp, st = scanned
+            x, ns = L.mamba2_block(lp, x, cfg, state={
+                "conv": st["conv"], "ssd": st["ssd"]})
+            return x, ns
+
+        def super_layer(x, scanned):
+            slp, sst, ac = scanned
+            x, ns = jax.lax.scan(inner, x, (slp, sst))
+            x, nac = L.attention_block(shared, x, cfg, positions,
+                                       cache=ac, cache_index=0)
+            if shared_mlp is not None:
+                x = L.swiglu_block(shared_mlp, x, cfg)
+            return x, (ns, nac)
+        x, (nss, nattn) = jax.lax.scan(
+            super_layer, x,
+            (params["layers"]["ssd_super"], cache["ssd_super"], cache["attn"]))
+        new_cache = {"ssd_super": nss, "attn": nattn}
+        if "ssd_trail" in params["layers"]:
+            x, nt = jax.lax.scan(
+                inner, x, (params["layers"]["ssd_trail"], cache["ssd_trail"]))
+            new_cache["ssd_trail"] = nt
+    else:
+        raise ValueError(fam)
+    return _logits(params, cfg, x), new_cache

@@ -1,0 +1,246 @@
+"""Sharding rules: parameter / activation / cache PartitionSpecs.
+
+Mesh axes: optional ``pod`` (slow inter-pod links), ``data`` (DP + FSDP /
+ZeRO param sharding), ``model`` (TP/EP). The DP axis group is
+``("pod", "data")`` when the pod axis exists.
+
+Rules are name-based with divisibility fallback: an axis is only sharded if
+its size divides by the mesh axis; otherwise that dim replicates (e.g.
+glm4's 2 KV heads can't split 16-way -> replicated, query heads still TP).
+MoE experts shard on ``model`` when E % model == 0 (true EP); otherwise the
+expert FF width shards instead (TP-in-expert) — grok's 8 experts on a
+16-way model axis take the second path.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints.
+#
+# GSPMD left unguided picks pathological activation layouts at 256 devices
+# (observed: global-batch activations with d_model sharded -> 39 GB
+# all-gathers of fp32 logits). Model code calls ``constrain(x, "dp", None,
+# "model")``-style hints; they are no-ops until a launcher installs the mesh
+# via ``set_activation_mesh`` (smoke tests / single-device runs unaffected).
+# ---------------------------------------------------------------------------
+
+_ACT_MESH: Mesh | None = None
+
+
+def set_activation_mesh(mesh: Mesh | None):
+    global _ACT_MESH
+    _ACT_MESH = mesh
+
+
+def dp_size() -> int:
+    if _ACT_MESH is None:
+        return 1
+    s = 1
+    for a in dp_axes(_ACT_MESH):
+        s *= _ACT_MESH.shape[a]
+    return s
+
+
+def model_size() -> int:
+    if _ACT_MESH is None or "model" not in _ACT_MESH.axis_names:
+        return 1
+    return _ACT_MESH.shape["model"]
+
+
+def grad_cast(x):
+    """Gradient dtype barrier: casts the COTANGENT flowing back through
+    this point to x's own dtype. Without it, f32 casts inside softmax /
+    silu / the loss keep backward activations (and therefore the TP
+    all-reduces and FSDP reduce-scatters of activation cotangents) in f32 —
+    2x the collective bytes. Identity in forward; identity for f32 primals.
+    """
+    dt = x.dtype
+
+    @jax.custom_vjp
+    def f(y):
+        return y
+
+    def fwd(y):
+        return y, None
+
+    def bwd(_, g):
+        return (g.astype(dt),)
+
+    f.defvjp(fwd, bwd)
+    return f(x)
+
+
+def constrain(x, *axes):
+    """Sharding hint + gradient dtype barrier. Tokens: "dp" (pod+data
+    group), "model", or None. Axes that don't exist in the mesh or don't
+    divide the dim are dropped.
+    """
+    mesh = _ACT_MESH
+    if mesh is None:
+        return x
+    x = grad_cast(x)
+    spec = []
+    for dim, ax in zip(x.shape, axes):
+        if ax is None:
+            spec.append(None)
+            continue
+        names = dp_axes(mesh) if ax == "dp" else (
+            (ax,) if ax in mesh.axis_names else ())
+        size = 1
+        for a in names:
+            size *= mesh.shape[a]
+        if names and dim % size == 0:
+            spec.append(names if len(names) > 1 else names[0])
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def _fix(spec, shape, mesh) -> P:
+    """Drop shard axes that don't divide the dim size."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(ax if dim % size == 0 else None)
+    return P(*out)
+
+
+# candidate specs by trailing path-name; leading layer-stack dims padded None
+_RULES = {
+    # attention
+    "wq": ("data", "model", None),
+    "wk": ("data", "model", None),
+    "wv": ("data", "model", None),
+    "wo": ("model", None, "data"),
+    "bq": ("model", None), "bk": ("model", None), "bv": ("model", None),
+    # mlp
+    "wg": ("data", "model"), "wu": ("data", "model"), "wd": ("model", "data"),
+    # moe (expert-dim EP preferred; falls to TP-in-expert via _moe_fallback)
+    "router": ("data", None),
+    # ssd / mamba
+    "in_proj": ("data", "model"), "out_proj": ("model", "data"),
+    "conv": (None, "model"),
+    "dt_bias": (None,), "A_log": (None,), "D_skip": (None,),
+    # mlstm gates
+    "wf": ("data", None), "wi": ("data", None), "bf": (None,), "bi": (None,),
+    # embeddings / head
+    "embed": ("model", "data"),
+    "head": ("data", "model"),
+    "frontend_proj": (None, "model"),
+    "ln": (None,), "final_ln": (None,),
+}
+
+_MOE_EXPERT_RULES = {
+    "wg": ("model", "data", None), "wu": ("model", "data", None),
+    "wd": ("model", None, "data"),
+    "wg_tp": (None, "data", "model"), "wu_tp": (None, "data", "model"),
+    "wd_tp": (None, "model", "data"),
+}
+
+
+def _leaf_spec(path, shape, mesh: Mesh) -> P:
+    names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    name = names[-1]
+    in_moe = "moe" in names
+    if in_moe and name in ("wg", "wu", "wd"):
+        # (stack..., E, D, F)-style: expert-dim EP if divisible, else TP
+        core = _MOE_EXPERT_RULES[name]
+        npad = len(shape) - len(core)
+        spec = (None,) * npad + core
+        e_ax = npad  # expert dim position
+        if shape[e_ax] % mesh.shape["model"] != 0:
+            core = _MOE_EXPERT_RULES[name + "_tp"]
+            spec = (None,) * npad + core
+        return _fix(spec, shape, mesh)
+    if name in ("embed", "head") and len(shape) == 3:       # audio (nc, ., .)
+        core = _RULES[name]
+        return _fix((None,) + core, shape, mesh)
+    if name in _RULES:
+        core = _RULES[name]
+        npad = len(shape) - len(core)
+        if npad < 0:  # unstacked variant (shared_attn etc.)
+            core = core[-len(shape):] if len(shape) else ()
+            npad = 0
+        return _fix((None,) * npad + tuple(core), shape, mesh)
+    return P()  # replicate unknowns (scalars, norms)
+
+
+def param_shardings(mesh: Mesh, params_shape) -> dict:
+    """NamedSharding tree for a params (or ShapeDtypeStruct) pytree."""
+    def f(path, leaf):
+        return NamedSharding(mesh, _leaf_spec(path, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def opt_shardings(mesh: Mesh, opt_shape) -> dict:
+    """Optimizer state: m/v inherit param sharding; step replicated."""
+    def f(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        if names and names[0] in ("m", "v"):
+            return NamedSharding(mesh, _leaf_spec(path[1:], leaf.shape, mesh))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(f, opt_shape)
+
+
+def batch_shardings(mesh: Mesh, batch_shape) -> dict:
+    dp = dp_axes(mesh)
+    def f(_, leaf):
+        spec = [dp if leaf.shape[0] % _axsize(mesh, dp) == 0 else None]
+        spec += [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(f, batch_shape)
+
+
+def _axsize(mesh, axes):
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s
+
+
+def cache_shardings(mesh: Mesh, cfg, cache_shape) -> dict:
+    """KV/SSM cache: batch on DP if divisible; KV heads / SSM heads / head
+    width on model (first trailing dim that divides); for batch-1 long-
+    context, the sequence dim of attention caches shards over data."""
+    dp = dp_axes(mesh)
+    dpsz = _axsize(mesh, dp)
+
+    def f(path, leaf):
+        shape = leaf.shape
+        # stacked layer dim first, batch second
+        spec = [None] * len(shape)
+        bdim = 1 if len(shape) >= 2 else None
+        batch_ok = bdim is not None and shape[bdim] % dpsz == 0
+        if batch_ok:
+            spec[bdim] = dp
+        # trailing dims: try to put "model" on the first divisible one
+        for i in range(len(shape) - 1, 1, -1):
+            if shape[i] % mesh.shape["model"] == 0 and spec[i] is None:
+                spec[i] = "model"
+                break
+        names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        if not batch_ok and ("k" in names or "v" in names) and len(shape) == 5:
+            # long-context batch-1 KV: shard sequence over data
+            if shape[2] % mesh.shape["data"] == 0:
+                spec[2] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(f, cache_shape)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,64 @@
+"""Jittable train / eval steps with microbatch gradient accumulation."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import loss_fn
+from repro.optim import AdamWConfig, adamw_update
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    optimizer: AdamWConfig = AdamWConfig()
+
+
+def make_train_step(cfg, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    With tcfg.microbatches > 1 the global batch splits on the leading dim and
+    grads accumulate in fp32 through a lax.scan (activation memory shrinks by
+    the microbatch factor; param gradients stay full-size)."""
+    k = tcfg.microbatches
+
+    def loss_wrap(params, batch):
+        return loss_fn(params, cfg, batch)
+
+    def train_step(params, opt_state, batch):
+        if k == 1:
+            (loss, aux), grads = jax.value_and_grad(
+                loss_wrap, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mbatch):
+                gacc, lacc = carry
+                (l, _), g = jax.value_and_grad(
+                    loss_wrap, has_aux=True)(params, mbatch)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l), ()
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc_fn, (g0, jnp.float32(0.0)), mb)
+            grads = jax.tree.map(lambda g: g / k, grads)
+            loss = loss / k
+            aux = {}
+        new_params, new_opt, om = adamw_update(
+            tcfg.optimizer, params, grads, opt_state)
+        metrics = {"loss": loss, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        loss, aux = loss_fn(params, cfg, batch)
+        return {"loss": loss, **aux}
+    return eval_step

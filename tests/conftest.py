@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: deliberately NO xla_force_host_platform_device_count here — smoke
+# tests and benches must see 1 device. Multi-device tests spawn subprocesses
+# with their own XLA_FLAGS (see helpers.run_subprocess).

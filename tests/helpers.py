@@ -1,0 +1,31 @@
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 600):
+    """Run python code in a subprocess with N host platform devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def safe_eps(pts, metric, target_quantile=0.15, margin=1e-4):
+    """Pick eps away from any pairwise distance (no knife-edge ties)."""
+    import numpy as np
+    from repro.core.metrics_host import get_host_metric
+    met = get_host_metric(metric)
+    d = met.true(met.cdist(pts[:200], pts[:200]))
+    vals = np.unique(d[np.triu_indices(len(d), 1)])
+    if len(vals) == 0:
+        return 1.0
+    eps = float(np.quantile(vals, target_quantile))
+    while np.any(np.abs(vals - eps) < margin):
+        eps += 3 * margin
+    return eps

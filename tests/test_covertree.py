@@ -1,0 +1,90 @@
+"""Cover tree: construction invariants + exact query vs brute force,
+including hypothesis property tests on random metric spaces."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.brute import brute_force_graph
+from repro.core.covertree import build_covertree
+from repro.core.graph import EpsGraph
+from tests.helpers import safe_eps
+
+
+@pytest.mark.parametrize("n,d,seed", [(100, 3, 0), (500, 5, 1), (1000, 8, 2)])
+def test_invariants_euclidean(n, d, seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(n, d)).astype(np.float32)
+    t = build_covertree(pts, "euclidean")
+    t.check_invariants()
+
+
+def test_invariants_with_duplicates():
+    rng = np.random.default_rng(3)
+    pts = rng.normal(size=(100, 4)).astype(np.float32)
+    pts = np.concatenate([pts, pts[:30], pts[:5], np.ones((7, 4), np.float32)])
+    t = build_covertree(pts, "euclidean")
+    t.check_invariants()
+
+
+@pytest.mark.parametrize("metric,gen", [
+    ("euclidean", lambda rng, n: rng.normal(size=(n, 6)).astype(np.float32)),
+    ("hamming", lambda rng, n: rng.integers(0, 2**32, size=(n, 6), dtype=np.uint32)),
+])
+def test_query_equals_brute(metric, gen):
+    rng = np.random.default_rng(7)
+    pts = gen(rng, 800)
+    eps = safe_eps(pts, metric)
+    t = build_covertree(pts, metric)
+    g = EpsGraph(len(pts), *t.query(pts, eps))
+    gb = brute_force_graph(pts, eps, metric)
+    assert g == gb
+
+
+def test_single_and_tiny():
+    pts = np.zeros((1, 3), np.float32)
+    t = build_covertree(pts)
+    t.check_invariants()
+    qi, pj = t.query(pts, 1.0)
+    assert len(qi) == 1  # the point is its own 0-distance neighbor
+    pts2 = np.array([[0, 0], [3, 4]], np.float32)
+    t2 = build_covertree(pts2)
+    g = EpsGraph(2, *t2.query(pts2, 5.0))
+    assert g.num_edges == 1
+
+
+def test_external_queries():
+    rng = np.random.default_rng(11)
+    pts = rng.normal(size=(500, 4)).astype(np.float32)
+    qs = rng.normal(size=(100, 4)).astype(np.float32)
+    t = build_covertree(pts)
+    qi, pj = t.query(qs, 1.0)
+    from repro.core.metrics_host import get_host_metric
+    met = get_host_metric("euclidean")
+    d = met.true(met.cdist(qs, pts))
+    want = set(zip(*np.nonzero(d <= 1.0)))
+    got = set(zip(qi.tolist(), pj.tolist()))
+    assert got == want
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(5, 120),
+    d=st.integers(1, 6),
+    seed=st.integers(0, 10_000),
+    leaf=st.integers(1, 20),
+    dup=st.integers(0, 30),
+)
+def test_property_tree_exactness(n, d, seed, leaf, dup):
+    """For ANY random cloud (+duplicates) and ANY leaf size, the cover tree
+    query reproduces the brute-force ε-graph exactly."""
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(n, d)).astype(np.float32)
+    if dup:
+        pts = np.concatenate([pts, pts[rng.integers(0, n, dup)]])
+    t = build_covertree(pts, "euclidean", leaf_size=leaf)
+    t.check_invariants()
+    eps = safe_eps(pts, "euclidean",
+                   target_quantile=float(rng.uniform(0.05, 0.6)))
+    g = EpsGraph(len(pts), *t.query(pts, eps))
+    gb = brute_force_graph(pts, eps)
+    assert g == gb, f"symdiff={g.symmetric_difference(gb)}"

@@ -1,0 +1,173 @@
+"""Distributed ε-NNG algorithms (host-simulated + device shard_map) must all
+produce the exact brute-force graph."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.brute import brute_force_graph
+from repro.core.host_algos import landmark_host, systolic_ring_host
+from repro.core.landmark import (ghost_membership, lpt_assignment,
+                                 select_centers, voronoi_assign)
+from repro.core.snn import snn_graph
+from repro.data import synthetic_pointset
+from tests.helpers import run_subprocess
+
+
+def clustered(n, d, seed):
+    return synthetic_pointset(n, d, "euclidean", seed=seed)
+
+
+@pytest.mark.parametrize("nranks", [1, 2, 5, 8])
+def test_systolic_matches_brute(nranks):
+    pts = clustered(1500, 8, 0)
+    gb = brute_force_graph(pts, 1.0)
+    g, stats = systolic_ring_host(pts, 1.0, nranks)
+    assert g == gb
+    assert stats.comm_bytes["ring"] >= 0
+
+
+@pytest.mark.parametrize("nranks,ghost_mode,strategy", [
+    (1, "coll", "random"), (4, "coll", "random"), (4, "ring", "random"),
+    (8, "coll", "greedy"), (7, "ring", "greedy"),
+])
+def test_landmark_matches_brute(nranks, ghost_mode, strategy):
+    pts = clustered(1500, 8, 1)
+    gb = brute_force_graph(pts, 1.0)
+    g, stats = landmark_host(pts, 1.0, nranks, ghost_mode=ghost_mode,
+                             center_strategy=strategy, seed=2)
+    assert g == gb
+    assert stats.partition_s >= 0 and stats.ghost_s >= 0
+
+
+def test_snn_matches_brute():
+    pts = clustered(2000, 10, 2)
+    assert snn_graph(pts, 1.0) == brute_force_graph(pts, 1.0)
+
+
+def test_hamming_distributed():
+    pts = synthetic_pointset(800, 8, "hamming", seed=3)
+    eps = 40
+    gb = brute_force_graph(pts, eps, "hamming")
+    g1, _ = systolic_ring_host(pts, eps, 4, metric="hamming")
+    g2, _ = landmark_host(pts, eps, 4, metric="hamming", seed=5)
+    assert g1 == gb and g2 == gb
+
+
+def test_lpt_balance():
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(1, 1000, 64)
+    f = lpt_assignment(sizes, 8)
+    loads = np.bincount(f, weights=sizes, minlength=8)
+    # Graham bound: max load <= (4/3 - 1/3m) * OPT; OPT >= mean
+    assert loads.max() <= (4 / 3) * max(sizes.sum() / 8, sizes.max()) + 1
+
+
+def test_ghost_lemma_soundness():
+    """Every cross-cell ε-pair's endpoints satisfy the Lemma-1 ghost bound."""
+    pts = clustered(600, 5, 4)
+    eps = 1.0
+    rng = np.random.default_rng(0)
+    centers = select_centers(len(pts), 16, rng)
+    cell, d_pC = voronoi_assign(pts, pts[centers], "euclidean")
+    from repro.core.metrics_host import get_host_metric
+    met = get_host_metric("euclidean")
+    dmat = np.asarray(met.true(met.cdist(pts, pts[centers])))
+    g = ghost_membership(dmat, cell, d_pC, eps)
+    gb = brute_force_graph(pts, eps)
+    for i, j in zip(gb.src, gb.dst):
+        ci, cj = cell[i], cell[j]
+        if ci != cj:
+            assert g[i, cj] and g[j, ci], (i, j)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(40, 300), nranks=st.integers(1, 9),
+       seed=st.integers(0, 1000), mode=st.sampled_from(["coll", "ring"]))
+def test_property_all_algorithms_agree(n, nranks, seed, mode):
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(n, 4)).astype(np.float32) * 2
+    from tests.helpers import safe_eps
+    eps = safe_eps(pts, "euclidean", target_quantile=0.3)
+    gb = brute_force_graph(pts, eps)
+    g1, _ = systolic_ring_host(pts, eps, nranks)
+    g2, _ = landmark_host(pts, eps, nranks, ghost_mode=mode, seed=seed)
+    assert g1 == gb and g2 == gb
+
+
+# ---------------------------------------------------------------------------
+# device (shard_map) engine — 8 host devices in a subprocess
+# ---------------------------------------------------------------------------
+
+_DEVICE_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.distributed import (systolic_nng, landmark_nng, make_nng_mesh,
+                                    LandmarkPlan)
+from repro.core.landmark import lpt_assignment, select_centers
+from repro.core.brute import brute_force_graph
+from repro.core.graph import EpsGraph
+from repro.core.metrics_host import get_host_metric
+from repro.data import synthetic_pointset
+
+SEN = 2**31 - 1
+rng = np.random.default_rng(3)
+n = 2048
+pts = synthetic_pointset(n, 6, "euclidean", seed=9)
+# the device engine evaluates distances in fp32 on the MXU; the oracle must
+# use the SAME arithmetic (tile_cdist) so knife-edge pairs at the eps
+# boundary classify identically (exactness = identical edge set under the
+# declared fp32 distance function, as in the paper's float implementation)
+from repro.core.distributed.device import tile_cdist
+eps = 1.0
+_d2 = np.asarray(tile_cdist(jnp.asarray(pts), jnp.asarray(pts), "euclidean"))
+_ii, _jj = np.nonzero(_d2 <= eps * eps)
+_keep = _ii < _jj
+gb = EpsGraph(n, _ii[_keep], _jj[_keep])
+mesh = make_nng_mesh(8)
+
+nbrs, cnt, ovf = systolic_nng(jnp.asarray(pts), float(eps), mesh, k_cap=512)
+assert not bool(np.asarray(ovf).any())
+nbrs = np.asarray(nbrs)
+ii, kk = np.nonzero(nbrs != SEN)
+assert EpsGraph(n, ii, nbrs[ii, kk]) == gb, "systolic mismatch"
+
+# overflow flag fires with tiny k_cap
+_, cnt2, ovf2 = systolic_nng(jnp.asarray(pts), eps, mesh, k_cap=1)
+assert bool(np.asarray(ovf2).any()) == bool((np.asarray(cnt2) > 1).any())
+
+m = 24
+met = get_host_metric("euclidean")
+cidx = select_centers(n, m, rng)
+cpts = pts[cidx]
+cell = np.argmin(met.cdist(pts, cpts), axis=1)
+sizes = np.bincount(cell, minlength=m)
+f = lpt_assignment(sizes, 8)
+plan = LandmarkPlan(m_centers=m, cap_coal=int(sizes.max())+32, cap_ghost=2048,
+                    g_per_pt=m, k_cap=512)
+Wids, wn, wc, Gids, gn, gc, ovf = landmark_nng(
+    jnp.asarray(pts), eps, jnp.asarray(cpts), jnp.asarray(f, np.int32),
+    mesh, plan)
+assert not bool(np.asarray(ovf).any())
+src, dst = [], []
+for idsv, nb in ((np.asarray(Wids), np.asarray(wn)),
+                 (np.asarray(Gids), np.asarray(gn))):
+    valid = idsv != SEN
+    ii, kk = np.nonzero((nb != SEN) & valid[:, None])
+    src.append(idsv[ii]); dst.append(nb[ii, kk])
+assert EpsGraph(n, np.concatenate(src), np.concatenate(dst)) == gb, "landmark"
+
+# hamming on device
+hpts = synthetic_pointset(1024, 8, "hamming", seed=4)
+heps = 40
+hgb = brute_force_graph(hpts, heps, "hamming")
+nbrs, cnt, ovf = systolic_nng(jnp.asarray(hpts), heps, mesh,
+                              metric="hamming", k_cap=256)
+nbrs = np.asarray(nbrs)
+ii, kk = np.nonzero(nbrs != SEN)
+assert EpsGraph(1024, ii, nbrs[ii, kk]) == hgb, "hamming systolic"
+print("DEVICE_OK")
+"""
+
+
+def test_device_engine_exact_8dev():
+    out = run_subprocess(_DEVICE_CODE, devices=8)
+    assert "DEVICE_OK" in out

@@ -1,0 +1,97 @@
+"""Pallas kernel validation: interpret-mode vs pure-jnp oracles over
+shape/dtype sweeps (per-kernel allclose requirement)."""
+import os
+
+import numpy as np
+import pytest
+
+os.environ["REPRO_PALLAS"] = "interpret"
+
+from repro.kernels import eps_count, pairwise_hamming, pairwise_sqdist  # noqa: E402
+from repro.kernels import ref  # noqa: E402
+from repro.kernels.ops import rowwise_hamming, rowwise_sqdist  # noqa: E402
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("q,p,d", [
+    (1, 1, 1), (7, 13, 3), (128, 128, 32), (300, 260, 130),
+    (256, 256, 512), (100, 513, 700),
+])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_pairwise_sqdist_matches_oracle(q, p, d, dtype):
+    x = RNG.normal(size=(q, d)).astype(dtype)
+    y = RNG.normal(size=(p, d)).astype(dtype)
+    got = np.asarray(pairwise_sqdist(x, y))
+    want = np.asarray(ref.pairwise_sqdist_ref(x, y))
+    scale = max(1.0, float(np.abs(want).max()))
+    np.testing.assert_allclose(got, want, atol=5e-3 * scale, rtol=1e-3)
+
+
+@pytest.mark.parametrize("q,p,w", [
+    (1, 1, 1), (5, 9, 3), (130, 200, 25), (128, 128, 8), (64, 300, 26),
+])
+def test_pairwise_hamming_exact(q, p, w):
+    x = RNG.integers(0, 2**32, size=(q, w), dtype=np.uint32)
+    y = RNG.integers(0, 2**32, size=(p, w), dtype=np.uint32)
+    got = np.asarray(pairwise_hamming(x, y))
+    want = np.asarray(ref.pairwise_hamming_ref(x, y))
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("q,p,d,eps", [
+    (10, 33, 4, 1.0), (100, 333, 20, 5.5), (256, 256, 64, 8.0),
+])
+def test_eps_count_fused(q, p, d, eps):
+    x = RNG.normal(size=(q, d)).astype(np.float32)
+    y = RNG.normal(size=(p, d)).astype(np.float32)
+    got = np.asarray(eps_count(x, y, eps))
+    want = np.asarray(ref.eps_count_ref(x, y, eps))
+    assert (got == want).all()
+
+
+def test_rowwise_helpers():
+    x = RNG.normal(size=(50, 7)).astype(np.float32)
+    y = RNG.normal(size=(50, 7)).astype(np.float32)
+    d = np.asarray(rowwise_sqdist(x, y))
+    want = ((x - y) ** 2).sum(1)
+    np.testing.assert_allclose(d, want, rtol=1e-5)
+    a = RNG.integers(0, 2**32, size=(20, 5), dtype=np.uint32)
+    b = RNG.integers(0, 2**32, size=(20, 5), dtype=np.uint32)
+    hw = np.asarray(rowwise_hamming(a, b))
+    assert (hw == np.bitwise_count(a ^ b).sum(1)).all()
+
+
+def test_jnp_fallback_matches_interpret():
+    """The fast-CPU jnp path must agree with the kernel path."""
+    x = RNG.normal(size=(70, 33)).astype(np.float32)
+    y = RNG.normal(size=(90, 33)).astype(np.float32)
+    ki = np.asarray(pairwise_sqdist(x, y))
+    os.environ["REPRO_PALLAS"] = "jnp"
+    try:
+        kj = np.asarray(pairwise_sqdist(x, y))
+    finally:
+        os.environ["REPRO_PALLAS"] = "interpret"
+    np.testing.assert_allclose(ki, kj, atol=1e-3, rtol=1e-4)
+
+
+@pytest.mark.parametrize("q,p,d,eps", [
+    (256, 512, 16, 1.0), (256, 1024, 64, 2.5), (512, 512, 128, 4.0),
+])
+def test_nng_tile_fused(q, p, d, eps):
+    from repro.kernels.nng_tile import nng_tile_pallas, nng_tile_ref
+    x = RNG.normal(size=(q, d)).astype(np.float32)
+    y = RNG.normal(size=(p, d)).astype(np.float32)
+    valid = (RNG.random(p) > 0.1).astype(np.int32)
+    cnt, bits = nng_tile_pallas(x, y, valid, eps, interpret=True)
+    cw, bw = nng_tile_ref(x, y, valid, eps)
+    assert (np.asarray(cnt) == np.asarray(cw)).all()
+    assert (np.asarray(bits) == np.asarray(bw)).all()
+    # bitmask decodes to the exact hit set
+    hits = np.unpackbits(
+        np.asarray(bits).view(np.uint8), axis=1, bitorder="little")[:, :p]
+    d2 = ((x[:, None, :] - y[None, :, :]) ** 2).sum(-1)
+    want = ((d2 <= eps**2 + 1e-5) & (valid != 0)[None, :])
+    loose = ((d2 <= eps**2 - 1e-5) & (valid != 0)[None, :])
+    assert ((hits.astype(bool) | want) == want).all()   # no false positives*
+    assert (loose <= hits.astype(bool)).all()           # no false negatives*

@@ -1,0 +1,64 @@
+"""End-to-end behaviour tests: the public API flows a user would run."""
+import numpy as np
+
+from repro.core.brute import brute_force_graph
+from repro.core.graph import EpsGraph, edges_from_pairs, merge_graphs
+from repro.data import load_pointset, synthetic_pointset
+
+
+def test_quickstart_flow():
+    """examples/quickstart.py logic: build an ε-graph three ways, agree."""
+    from repro.core.covertree import build_covertree
+    from repro.core.host_algos import landmark_host, systolic_ring_host
+
+    pts = synthetic_pointset(1200, 8, "euclidean", seed=0)
+    eps = 1.0
+    t = build_covertree(pts)
+    g_tree = EpsGraph(len(pts), *t.query(pts, eps))
+    g_sys, _ = systolic_ring_host(pts, eps, 4)
+    g_lm, _ = landmark_host(pts, eps, 4)
+    gb = brute_force_graph(pts, eps)
+    assert g_tree == g_sys == g_lm == gb
+    assert g_tree.avg_degree > 0
+
+
+def test_train_driver_smoke(tmp_path):
+    from repro.launch.train import main
+    losses = main(["--arch", "musicgen-large", "--smoke", "--steps", "25",
+                   "--batch", "4", "--seq", "32", "--lr", "3e-3",
+                   "--ckpt-dir", str(tmp_path / "ck"),
+                   "--ckpt-every", "10"])
+    assert len(losses) == 25
+    assert losses[-1] < losses[0]
+
+
+def test_serve_driver_smoke():
+    from repro.launch.serve import main
+    gen = main(["--arch", "qwen2-7b", "--smoke", "--batch", "2",
+                "--prompt-len", "16", "--gen", "8"])
+    assert gen.shape[0] == 2 and np.issubdtype(gen.dtype, np.integer)
+
+
+def test_nng_driver_verified():
+    from repro.launch.nng_run import main
+    g = main(["--n", "1024", "--dim", "6", "--eps", "1.0",
+              "--algo", "landmark", "--verify", "--k-cap", "512"])
+    assert g.num_edges > 0
+
+
+def test_graph_utils():
+    g1 = edges_from_pairs(10, np.array([[0, 1], [1, 0], [2, 3], [3, 3]]))
+    assert g1.num_edges == 2  # dedup + self-loop dropped
+    g2 = edges_from_pairs(10, np.array([[0, 1], [4, 5]]))
+    gm = merge_graphs(10, [g1, g2])
+    assert gm.num_edges == 3
+    assert gm.degree().sum() == 6
+    assert g1.symmetric_difference(g2) == 2
+
+
+def test_pointset_loader_fallback(tmp_path):
+    pts = load_pointset("nonexistent", 100, 8, "euclidean",
+                        data_dir=str(tmp_path))
+    assert pts.shape == (100, 8)
+    h = synthetic_pointset(50, 4, "hamming", seed=1)
+    assert h.dtype == np.uint32
