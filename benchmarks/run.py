@@ -3,7 +3,9 @@ Prints ``name,us_per_call,derived`` CSV."""
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)  # so `benchmarks.tables` resolves when run as a script
 
 
 def main() -> None:
@@ -14,6 +16,7 @@ def main() -> None:
     tables.bench_speedup_over_snn()    # Table II
     tables.bench_strong_scaling()      # Fig 2
     tables.bench_phase_breakdown()     # Figs 3-5
+    tables.bench_block_pruning()       # sparsity: tile-skip rates
     tables.bench_distance_kernels()    # kernel layer
 
 

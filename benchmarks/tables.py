@@ -155,6 +155,26 @@ def bench_phase_breakdown():
              f"comm_bytes={sum(st.comm_bytes.values())}")
 
 
+# -- sparsity: block-summary pruning rate (the systolic fast path win) ------
+def bench_block_pruning():
+    """Tiles skipped by the triangle-inequality block-summary test on
+    block-clustered data (the paper's sparsity regime), plus the wall-clock
+    effect of pruning on the host systolic reference."""
+    from repro.data import blocked_clusters
+    for nranks in (8, 32, 64):
+        pts = blocked_clusters(8192, 16, nranks, seed=4)
+        eps = 1.0
+        dt_off, (g0, st0) = _time(
+            lambda: systolic_ring_host(pts, eps, nranks, prune=False))
+        dt_on, (g, st) = _time(lambda: systolic_ring_host(pts, eps, nranks))
+        assert g == g0 and st0.tiles_skipped == 0
+        rate = st.tiles_skipped / max(st.tiles_scheduled, 1)
+        emit(f"prune/systolic-host/ranks={nranks}", dt_on * 1e6,
+             f"skipped={st.tiles_skipped}/{st.tiles_scheduled}"
+             f";rate={rate:.2f};speedup_vs_noprune={dt_off/max(dt_on,1e-9):.2f}"
+             f";edges={g.num_edges}")
+
+
 # -- kernel microbench (CPU jnp path; TPU path is the Pallas kernel) --------
 def bench_distance_kernels():
     import jax

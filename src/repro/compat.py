@@ -1,0 +1,21 @@
+"""jax version-compatibility shims.
+
+The codebase targets current jax (``jax.shard_map``, ``AxisType``); the
+container ships 0.4.37 where those live elsewhere or don't exist. Route all
+version-sensitive constructs through here so engine/test code stays on one
+spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(body, mesh, in_specs, out_specs):
+    """``jax.shard_map`` (check_vma) on recent releases,
+    ``jax.experimental.shard_map`` (check_rep) before."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)

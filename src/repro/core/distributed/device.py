@@ -1,12 +1,26 @@
 """Device (SPMD) ε-graph engine: the paper's algorithms as shard_map programs.
 
-This is the TPU-native realization described in DESIGN.md §3:
+This is the TPU-native, *sparsity-aware* realization described in DESIGN.md
+§3:
 
-- ``systolic_nng`` — Algorithm 4. Point blocks rotate around the mesh ring via
-  ``jax.lax.ppermute`` inside a ``fori_loop``; each step evaluates one
-  (local × visiting) distance tile on the MXU and folds hits into fixed-
-  capacity neighbor lists. XLA overlaps the collective-permute with the tile
-  matmul (the paper's communication/compute overlap, expressed natively).
+- ``systolic_nng`` — Algorithm 4. Point blocks rotate around the mesh ring
+  via ``jax.lax.ppermute`` inside a ``fori_loop``. Each ring step runs the
+  fused bitmask tile kernel (``repro.kernels.nng_tile_bits``): distances are
+  computed in VMEM on the MXU, thresholded there, and only a bit-packed
+  adjacency mask (n_loc × n_loc/32 uint32, 128× smaller than the fp32
+  distance tile) plus exact per-row counts reach HBM. Neighbor ids are then
+  extracted from the bitmask by a two-level selection (``_bits_to_ids``):
+  pick the k lowest-indexed nonzero words per row, unpack only those, and
+  top_k the candidates — never sorting an n_loc² array. The fp32 distance
+  tile is never materialized in HBM on this path.
+
+  Block-summary pruning (the paper's sparsity claim): each shard computes a
+  bounding center + radius for its block once up front and all-gathers the
+  (nranks, d+1) summary table. A ring round whose partner block satisfies
+  d(center_i, center_j) > r_i + r_j + eps cannot contain any ε-pair
+  (triangle inequality), so the tile evaluation is skipped entirely via
+  ``lax.cond`` — only the collective-permute runs, keeping the ring flowing.
+  A per-rank ``tiles_skipped`` counter reports the pruning rate.
 
 - ``landmark_nng`` — Algorithms 5 + 6. Voronoi assignment against replicated
   centers (one (n_loc × m) MXU tile), cell coalescing and ε-ghost exchange as
@@ -16,7 +30,8 @@ This is the TPU-native realization described in DESIGN.md §3:
 Everything is shape-static: neighbor lists are (·, K) id arrays padded with
 INT32_MAX, counts are exact, and overflow flags report capacity misses so the
 host driver can re-plan (grow K / capacities) and re-run — exactness is
-preserved end-to-end.
+preserved end-to-end (see ``repro.launch.nng_run.run_systolic`` /
+``run_landmark`` for the re-plan loops).
 
 Shapes are planned host-side by ``plan_landmark`` (the "indexing phase"):
 capacity knobs are static compile-time values, as they would be in a real
@@ -31,6 +46,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map as _shard_map
+from repro.kernels import nng_tile_bits
 
 SENTINEL = jnp.int32(2**31 - 1)
 
@@ -85,11 +103,97 @@ def _hits_to_ids(mask, ids_row, k):
     return jnp.where(top == -SENTINEL, SENTINEL, -top)
 
 
+def _bits_to_ids(bits, id0, k):
+    """Vectorized bitmask -> k-smallest hit ids (sorted, SENTINEL-padded).
+
+    bits: (m, W) uint32 packed hit masks (little-endian; column c of the
+    tile is word c // 32, bit c % 32); the id of column c is ``id0 + c``
+    (global ids are block-contiguous by construction).
+
+    Two-level selection avoids the old O(m·n log n) sort over the full tile:
+    the k smallest set-bit positions of a row lie inside its k lowest-
+    indexed NONZERO words, so we top_k over the (m, W) word-occupancy map
+    (32× smaller than the tile), gather + unpack only those k words, and
+    top_k the resulting 32k candidates.
+    """
+    m, W = bits.shape
+    kw = min(k, W)
+    wid = jnp.where(bits != 0, jnp.arange(W, dtype=jnp.int32)[None, :],
+                    jnp.int32(W))
+    nwid, _ = jax.lax.top_k(-wid, kw)          # kw smallest word indices
+    widx = -nwid                               # (m, kw); W == "no word"
+    words = jnp.take_along_axis(bits, jnp.minimum(widx, W - 1), axis=1)
+    words = jnp.where(widx < W, words, jnp.uint32(0))
+    bitpos = jnp.arange(32, dtype=jnp.uint32)
+    set_ = ((words[:, :, None] >> bitpos[None, None, :]) & 1) == 1
+    cand = (id0 + widx[:, :, None] * 32
+            + bitpos.astype(jnp.int32)[None, None, :])
+    cand = jnp.where(set_, cand, SENTINEL).reshape(m, kw * 32)
+    c = kw * 32
+    if k >= c:
+        out = jnp.sort(cand, axis=-1)
+        if k > c:
+            pad = jnp.full((m, k - c), SENTINEL, dtype=out.dtype)
+            out = jnp.concatenate([out, pad], axis=-1)
+        return out
+    top, _ = jax.lax.top_k(-cand, k)
+    return jnp.where(top == -SENTINEL, SENTINEL, -top)
+
+
+def _popcount_rows(bits):
+    """Exact per-row hit counts from the packed bitmask -> (m,) int32."""
+    return jnp.sum(jax.lax.population_count(bits).astype(jnp.int32), axis=-1)
+
+
 # ---------------------------------------------------------------------------
-# Algorithm 4 — systolic ring
+# Algorithm 4 — systolic ring (fused bitmask tiles + block-summary pruning)
 # ---------------------------------------------------------------------------
 
-def _systolic_local(x, ids, *, axis, nranks, ceps, metric, k_cap):
+def _block_summary(x, metric):
+    """Bounding (center, radius) of a shard's block in TRUE distance.
+
+    Euclidean: centroid + max L2 distance to it. Hamming: the first block
+    point serves as center (popcount distances are exact integers)."""
+    if metric == "euclidean":
+        xf = x.astype(jnp.float32)
+        c = jnp.mean(xf, axis=0)
+        r = jnp.sqrt(jnp.max(jnp.sum((xf - c[None, :]) ** 2, axis=-1)))
+        return c, r
+    c = x[0]
+    xor = jnp.bitwise_xor(x, c[None, :])
+    r = jnp.max(jnp.sum(jax.lax.population_count(xor).astype(jnp.int32),
+                        axis=-1))
+    return c, r.astype(jnp.float32)
+
+
+def _round_skip_flags(x, partner, eps, *, axis, metric, prune):
+    """Per-round prune decisions from the all-gathered block summary table.
+
+    skip[r] is True when no point of my block can be within eps of any
+    point of round r's partner block: d(c_me, c_p) > r_me + r_p + eps.
+    Euclidean center distances are fp32, so the bound carries a small
+    relative slack — under-pruning is always safe, over-pruning never is.
+    """
+    nrounds = partner.shape[0]
+    if not prune:
+        return jnp.zeros((nrounds,), bool)
+    c, rad = _block_summary(x, metric)
+    call = jax.lax.all_gather(c, axis)          # (nranks, d) summary table
+    radall = jax.lax.all_gather(rad, axis)      # (nranks,)
+    pc = call[partner]
+    if metric == "euclidean":
+        dc = jnp.sqrt(jnp.sum((pc - c[None, :]) ** 2, axis=-1))
+        bound = (rad + radall[partner] + eps) * (1.0 + 1e-5) + 1e-6
+    else:
+        xor = jnp.bitwise_xor(pc, c[None, :])
+        dc = jnp.sum(jax.lax.population_count(xor).astype(jnp.int32),
+                     axis=-1).astype(jnp.float32)
+        bound = rad + radall[partner] + eps
+    skip = dc > bound
+    return skip.at[0].set(False)                # self tile never skipped
+
+
+def _systolic_local(x, ids, *, axis, nranks, eps, metric, k_cap, prune):
     """Per-shard body (runs under shard_map). x: (n_loc, d), ids: (n_loc,).
 
     Symmetry halving (paper §IV-C: "we therefore only need N/2 rounds"):
@@ -97,45 +201,76 @@ def _systolic_local(x, ids, *, axis, nranks, ceps, metric, k_cap):
     block carries its own neighbor accumulator around the ring and one final
     collective-permute sends it home. Tiles evaluated: N/2 + 1 instead of N
     (at the boundary round of even N only the lower rank of each pair
-    evaluates). Halves distance compute and tile memory traffic for one
-    extra permute of the (n_loc, K) accumulators.
+    evaluates). The fused kernel is invoked once per direction (forward and
+    mirror), each writing only its bitmask + counts to HBM.
+
+    Relies on block-contiguous global ids (``ids = arange(n)`` sharded along
+    the ring), so a visiting block is fully described by its first id.
     """
     n_loc = x.shape[0]
     perm = [(i, (i - 1) % nranks) for i in range(nranks)]
     me = jax.lax.axis_index(axis)
     rounds = nranks // 2
+    id0 = ids[0]
 
-    def eval_tile(y, yids, do_eval):
-        d = tile_cdist(x, y, metric)
-        return (d <= ceps) & (ids[:, None] != yids[None, :]) & do_eval
+    # prune schedule: skip[r] / sched[r] for ring rounds r = 0..rounds
+    rr = jnp.arange(rounds + 1)
+    partner = (me + rr) % nranks
+    skip = _round_skip_flags(x, partner, eps,
+                             axis=axis, metric=metric, prune=prune)
+    if nranks % 2 == 0 and rounds > 0:
+        sched = jnp.where(rr == rounds, me < partner, True)
+    else:
+        sched = jnp.ones((rounds + 1,), bool)
+    do_eval = sched & ~skip
+    tiles_skipped = jnp.sum((sched & skip).astype(jnp.int32))
+
+    ones = jnp.ones((n_loc,), jnp.int32)
+
+    def tile_bits(a, b):
+        return nng_tile_bits(a, b, ones, eps, metric=metric)
 
     def step(r, carry):
-        y, yids, ynbrs, ycnt, nbrs, cnt = carry
+        y, yid0, ynbrs, ycnt, nbrs, cnt = carry
         # rotate the visiting block + its mirror accumulator (overlapped by
-        # XLA with the tile matmul — the paper's send/recv-compute overlap)
+        # XLA with the tile kernel — the paper's send/recv-compute overlap)
         y = jax.lax.ppermute(y, axis, perm)
-        yids = jax.lax.ppermute(yids, axis, perm)
+        yid0 = jax.lax.ppermute(yid0, axis, perm)
         ynbrs = jax.lax.ppermute(ynbrs, axis, perm)
         ycnt = jax.lax.ppermute(ycnt, axis, perm)
-        partner = (me + r) % nranks
-        boundary = jnp.logical_and(nranks % 2 == 0, r == rounds)
-        do_eval = jnp.logical_or(~boundary, me < partner)
-        mask = eval_tile(y, yids, do_eval)
-        cnt = cnt + jnp.sum(mask.astype(jnp.int32), axis=1)
-        nbrs = _merge_ids(nbrs, _hits_to_ids(mask, yids, k_cap))
-        ycnt = ycnt + jnp.sum(mask.astype(jnp.int32), axis=0)
-        ynbrs = _merge_ids(ynbrs, _hits_to_ids(mask.T, ids, k_cap))
-        return y, yids, ynbrs, ycnt, nbrs, cnt
+
+        # the WHOLE tile evaluation — kernel, id extraction, merge — sits
+        # inside the cond so a pruned round costs only the permutes
+        def _eval(acc):
+            nbrs_, cnt_, ynbrs_, ycnt_ = acc
+            fc, fb = tile_bits(x, y)     # visiting pts near my rows
+            rc, rb = tile_bits(y, x)     # my pts near visiting rows (mirror)
+            cnt_ = cnt_ + fc
+            nbrs_ = _merge_ids(nbrs_, _bits_to_ids(fb, yid0, k_cap))
+            ycnt_ = ycnt_ + rc
+            ynbrs_ = _merge_ids(ynbrs_, _bits_to_ids(rb, id0, k_cap))
+            return nbrs_, cnt_, ynbrs_, ycnt_
+
+        nbrs, cnt, ynbrs, ycnt = jax.lax.cond(
+            do_eval[r], _eval, lambda acc: acc, (nbrs, cnt, ynbrs, ycnt))
+        return y, yid0, ynbrs, ycnt, nbrs, cnt
 
     nbrs0 = jnp.full((n_loc, k_cap), SENTINEL, dtype=jnp.int32)
     cnt0 = jnp.zeros((n_loc,), dtype=jnp.int32)
-    # self tile (round 0)
-    mask0 = eval_tile(x, ids, jnp.bool_(True))
-    cnt = jnp.sum(mask0.astype(jnp.int32), axis=1)
-    nbrs = _merge_ids(nbrs0, _hits_to_ids(mask0, ids, k_cap))
+    # self tile (round 0): clear the diagonal bit (row i, column i) and take
+    # counts from the cleared bitmask — structurally excludes self pairs
+    # even when fp32 rounding pushes d(x, x) past eps.
+    _, bits0 = tile_bits(x, x)
+    rows = jnp.arange(n_loc)
+    wsel = rows // 32
+    bsel = (rows % 32).astype(jnp.uint32)
+    bits0 = bits0.at[rows, wsel].set(
+        bits0[rows, wsel] & ~(jnp.uint32(1) << bsel))
+    cnt = _popcount_rows(bits0)
+    nbrs = _merge_ids(nbrs0, _bits_to_ids(bits0, id0, k_cap))
     if rounds > 0:
         _, _, ynbrs, ycnt, nbrs, cnt = jax.lax.fori_loop(
-            1, rounds + 1, step, (x, ids, nbrs0, cnt0, nbrs, cnt))
+            1, rounds + 1, step, (x, id0, nbrs0, cnt0, nbrs, cnt))
         # each block's mirror accumulator sits `rounds` hops downstream of
         # its home rank; one permute returns it
         perm_home = [(i, (i + rounds) % nranks) for i in range(nranks)]
@@ -144,7 +279,7 @@ def _systolic_local(x, ids, *, axis, nranks, ceps, metric, k_cap):
         nbrs = _merge_ids(nbrs, ynbrs)
         cnt = cnt + ycnt
     overflow = jnp.any(cnt > k_cap)[None]
-    return nbrs, cnt, overflow
+    return nbrs, cnt, overflow, tiles_skipped[None]
 
 
 def make_nng_mesh(nranks: int | None = None) -> Mesh:
@@ -162,10 +297,17 @@ def systolic_nng(
     metric: str = "euclidean",
     k_cap: int = 64,
     axis: str = "ring",
+    prune: bool = True,
 ):
-    """Distributed exact ε-NNG via the systolic ring. Returns (nbrs, cnt,
-    overflow): nbrs (n, k_cap) int32 neighbor ids (SENTINEL-padded), cnt (n,)
-    exact neighbor counts, overflow () bool — grow k_cap and re-run if set.
+    """Distributed exact ε-NNG via the sparsity-aware systolic ring.
+
+    Returns (nbrs, cnt, overflow, tiles_skipped):
+      - nbrs (n, k_cap) int32 neighbor ids (SENTINEL-padded),
+      - cnt (n,) exact neighbor counts,
+      - overflow (nranks,) bool — grow k_cap and re-run if any is set
+        (``repro.launch.nng_run.run_systolic`` automates this),
+      - tiles_skipped (nranks,) int32 — ring tiles pruned per rank by the
+        block-summary triangle-inequality test (``prune=False`` disables).
 
     ``points`` rows must be a multiple of the ring size (pad upstream with
     far-away sentinel points if needed; repro.launch handles this).
@@ -173,17 +315,15 @@ def systolic_nng(
     nranks = mesh.shape[axis]
     n, _ = points.shape
     assert n % nranks == 0, (n, nranks)
-    ceps = _comparable(eps, metric)
     ids = jnp.arange(n, dtype=jnp.int32)
 
     body = functools.partial(
-        _systolic_local, axis=axis, nranks=nranks, ceps=ceps,
-        metric=metric, k_cap=k_cap)
-    fn = jax.shard_map(
-        body, mesh=mesh,
+        _systolic_local, axis=axis, nranks=nranks, eps=float(eps),
+        metric=metric, k_cap=k_cap, prune=prune)
+    fn = _shard_map(
+        body, mesh,
         in_specs=(P(axis, None), P(axis)),
-        out_specs=(P(axis, None), P(axis), P(axis)),
-        check_vma=False,
+        out_specs=(P(axis, None), P(axis), P(axis), P(axis)),
     )
     return fn(points, ids)
 
@@ -370,11 +510,10 @@ def landmark_nng(
     body = functools.partial(
         _landmark_local, axis=axis, nranks=nranks, ceps=ceps,
         two_eps_c=two_eps_c, metric=metric, plan=plan)
-    fn = jax.shard_map(
-        body, mesh=mesh,
+    fn = _shard_map(
+        body, mesh,
         in_specs=(P(axis, None), P(axis), P(), P()),
         out_specs=(P(axis), P(axis, None), P(axis),
                    P(axis), P(axis, None), P(axis), P(axis)),
-        check_vma=False,
     )
     return fn(points, ids, centers, f)

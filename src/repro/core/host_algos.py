@@ -29,6 +29,8 @@ class PhaseStats:
     ghost_s: float = 0.0
     comm_bytes: dict = field(default_factory=dict)
     per_rank_s: np.ndarray | None = None   # simulated per-rank compute time
+    tiles_scheduled: int = 0   # systolic: tiles the ring schedule would run
+    tiles_skipped: int = 0     # systolic: tiles pruned by block summaries
 
     @property
     def total_s(self):
@@ -55,15 +57,49 @@ def _block_partition(n: int, nranks: int):
     return starts
 
 
+def _block_summaries(points: np.ndarray, starts: np.ndarray, metric: str):
+    """Bounding (centers, radii) per block in TRUE distance (float64 host
+    math — the exactness ground truth the device engine's fp32 summaries
+    are slack-guarded against). Mirrors ``device._block_summary``."""
+    met = get_host_metric(metric)
+    nranks = len(starts) - 1
+    centers, radii = [], np.zeros(nranks)
+    for j in range(nranks):
+        blk = points[starts[j]:starts[j + 1]]
+        if metric == "euclidean":
+            c = blk.astype(np.float64).mean(axis=0)
+            d = ((blk.astype(np.float64) - c[None, :]) ** 2).sum(axis=-1)
+            radii[j] = float(np.sqrt(d.max())) if len(blk) else 0.0
+            centers.append(c)
+        else:
+            c = blk[0]
+            radii[j] = float(
+                np.asarray(met.true(met.cdist(blk, c[None, :]))).max())
+            centers.append(c)
+    centers = np.stack(centers)
+    if metric == "euclidean":
+        diff = centers[:, None, :] - centers[None, :, :]
+        dcc = np.sqrt((diff * diff).sum(axis=-1))
+    else:
+        dcc = np.asarray(met.true(met.cdist(centers, centers)))
+    return dcc, radii
+
+
 def systolic_ring_host(
     points: np.ndarray, eps: float, nranks: int, metric: str = "euclidean",
-    leaf_size: int = 10,
+    leaf_size: int = 10, prune: bool = True,
 ) -> tuple[EpsGraph, PhaseStats]:
     """Algorithm 4: each rank trees its block; blocks rotate around the ring.
 
     Symmetry halving: round r pairs rank j with block (j + r) mod N; only
     rounds r <= N/2 run, and at r = N/2 (N even) only the lower rank of each
     pair evaluates, so every unordered block pair is evaluated exactly once.
+
+    Block-summary pruning (mirrors the device engine's schedule): a tile is
+    skipped when d(center_j, center_b) > r_j + r_b + eps — by the triangle
+    inequality no ε-pair can span the two blocks. The block still rotates
+    (ring_bytes unchanged); only the query is elided. ``stats.tiles_skipped``
+    / ``stats.tiles_scheduled`` report the pruning rate.
     """
     n = len(points)
     stats = PhaseStats()
@@ -76,6 +112,7 @@ def systolic_ring_host(
     stats.tree_s += time.perf_counter() - t0
 
     t0 = time.perf_counter()
+    dcc, radii = _block_summaries(points, starts, metric)
     src, dst = [], []
     point_bytes = points.dtype.itemsize * points.shape[1]
     ring_bytes = 0
@@ -89,6 +126,10 @@ def systolic_ring_host(
                 continue  # halving round: evaluate each unordered pair once
             if r > 0:
                 ring_bytes += int(starts[b + 1] - starts[b]) * point_bytes
+            stats.tiles_scheduled += 1
+            if prune and dcc[j, b] > radii[j] + radii[b] + eps + 1e-9:
+                stats.tiles_skipped += 1
+                continue
             tq0 = time.perf_counter()
             qi, pj = trees[j].query(points[starts[b]:starts[b + 1]], eps)
             per_rank[j] += time.perf_counter() - tq0

@@ -1,2 +1,6 @@
 from .pipeline import synthetic_lm_batches, TokenBatcher  # noqa: F401
-from .pointsets import load_pointset, synthetic_pointset  # noqa: F401
+from .pointsets import (  # noqa: F401
+    blocked_clusters,
+    load_pointset,
+    synthetic_pointset,
+)

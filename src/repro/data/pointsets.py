@@ -40,6 +40,23 @@ def synthetic_pointset(n: int, dim: int, metric: str = "euclidean",
     raise ValueError(metric)
 
 
+def blocked_clusters(n: int, dim: int, nblocks: int, *, spread: float = 0.05,
+                     sep: float = 20.0, seed: int = 0) -> np.ndarray:
+    """One tight cluster per contiguous index block, centers pairwise
+    >= ``sep`` apart (norm laddering). The block-partition sparsity regime:
+    with block-per-rank sharding every cross-block systolic tile is prunable
+    by the triangle-inequality block-summary test."""
+    assert n % nblocks == 0, (n, nblocks)  # output has exactly n rows
+    rng = np.random.default_rng(seed)
+    ctrs = rng.normal(size=(nblocks, dim)).astype(np.float64)
+    ctrs = (ctrs / np.linalg.norm(ctrs, axis=1, keepdims=True)) * sep
+    ctrs *= (1 + np.arange(nblocks))[:, None]
+    reps = n // nblocks
+    pts = (np.repeat(ctrs, reps, axis=0)
+           + rng.normal(size=(nblocks * reps, dim)) * spread)
+    return pts.astype(np.float32)
+
+
 def _read_fvecs(path: str) -> np.ndarray:
     raw = np.fromfile(path, dtype=np.int32)
     d = raw[0]

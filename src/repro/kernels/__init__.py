@@ -4,6 +4,7 @@ from .ops import (  # noqa: F401
     Metric,
     eps_count,
     get_metric,
+    nng_tile_bits,
     pairwise_hamming,
     pairwise_sqdist,
 )

@@ -21,6 +21,8 @@ import numpy as np
 
 from . import ref
 from .eps_count import eps_count_pallas
+from .nng_tile import (nng_tile_hamming_pallas, nng_tile_hamming_ref,
+                       nng_tile_pallas, nng_tile_ref)
 from .pairwise_hamming import pairwise_hamming_pallas
 from .pairwise_l2 import pairwise_sqdist_pallas
 
@@ -107,6 +109,74 @@ def eps_count(x, y, eps: float) -> jnp.ndarray:
     mask = (jnp.arange(yp.shape[0]) < p).astype(jnp.int32)
     out = eps_count_pallas(xp, yp, mask, eps, interpret=(mode == "interpret"))
     return out[:q]
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "tq", "tp", "interpret"))
+def _nng_tile_l2_padded(x, y, yv, eps, tq, tp, interpret):
+    return nng_tile_pallas(x, y, yv, eps, tq=tq, tp=tp, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "tq", "tp", "interpret"))
+def _nng_tile_ham_padded(x, y, yv, eps, tq, tp, interpret):
+    return nng_tile_hamming_pallas(
+        x, y, yv, eps, tq=tq, tp=tp, interpret=interpret)
+
+
+def nng_tile_bits(x, y, y_valid, eps: float, metric: str = "euclidean"):
+    """Fused ε-NNG tile: (cnt (q,), bits (q, ceil(p/32)) uint32).
+
+    cnt[i] = |{j : valid[j] and d(x_i, y_j) <= eps}| (true-distance eps for
+    both metrics); bits packs the hit mask little-endian (column j -> word
+    j // 32, bit j % 32). Pads to tile multiples internally; pad rows carry
+    y_valid = 0, so bits beyond column p - 1 are always zero. On the
+    compiled/interpret path the fp32 distance tile never leaves VMEM.
+    """
+    mode = _mode()
+    q = x.shape[0]
+    p = y.shape[0]
+    nw = -(-p // 32)
+    yv = jnp.asarray(y_valid, jnp.int32)
+    if metric == "euclidean":
+        x = jnp.asarray(x, jnp.float32)
+        y = jnp.asarray(y, jnp.float32)
+        if mode == "jnp":
+            yp, _ = _pad_rows(y, 32)
+            yvp, _ = _pad_rows(yv, 32)
+            cnt, bits = nng_tile_ref(x, yp, yvp, eps)
+            return cnt, bits[:, :nw]
+        tq = 256 if q >= 256 else _round_up(q, 8)
+        tp = 512 if p >= 512 else _round_up(p, 128)
+        xp, _ = _pad_rows(x, tq)
+        yp, _ = _pad_rows(y, tp)
+        yvp, _ = _pad_rows(yv, tp)
+        xp = _pad_cols(xp, 128)
+        yp = _pad_cols(yp, 128)
+        cnt, bits = _nng_tile_l2_padded(
+            xp, yp, yvp, float(eps), tq, tp, mode == "interpret")
+        return cnt[:q], bits[:q, :nw]
+    if metric == "hamming":
+        x = jnp.asarray(x, jnp.uint32)
+        y = jnp.asarray(y, jnp.uint32)
+        if mode == "jnp":
+            yp, _ = _pad_rows(y, 32)
+            yvp, _ = _pad_rows(yv, 32)
+            cnt, bits = nng_tile_hamming_ref(x, yp, yvp, eps)
+            return cnt, bits[:, :nw]
+        tq = 128 if q >= 128 else _round_up(q, 8)
+        tp = 256 if p >= 256 else _round_up(p, 128)
+        xp, _ = _pad_rows(x, tq)
+        yp, _ = _pad_rows(y, tp)
+        yvp, _ = _pad_rows(yv, tp)
+        xp = _pad_cols(xp, 8)
+        yp = _pad_cols(yp, 8)
+        cnt, bits = _nng_tile_ham_padded(
+            xp, yp, yvp, float(eps), tq, tp, mode == "interpret")
+        return cnt[:q], bits[:q, :nw]
+    raise ValueError(metric)
 
 
 @jax.jit

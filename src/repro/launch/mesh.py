@@ -3,28 +3,40 @@
 Defined as FUNCTIONS so importing this module never touches jax device
 state (jax locks the device count on first backend init; dryrun.py must set
 XLA_FLAGS before any jax call).
+
+``AxisType`` landed in jax 0.6; on older releases every mesh axis is
+implicitly Auto, so the compat shims below simply omit the argument.
 """
 from __future__ import annotations
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:
+    from jax.sharding import AxisType
+except ImportError:          # jax < 0.6: axes are implicitly Auto
+    AxisType = None
+
+
+def _auto_axis_kw(n_axes: int) -> dict:
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 = 256 chips per pod; multi_pod adds a 2-pod leading axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_auto_axis_kw(len(axes)))
 
 
 def make_ring_mesh(nranks: int | None = None) -> Mesh:
     """1D ring over all devices — used by the ε-NNG engine."""
     devs = jax.devices()
     n = nranks or len(devs)
-    return Mesh(np.asarray(devs[:n]), ("ring",),
-                axis_types=(AxisType.Auto,))
+    return Mesh(np.asarray(devs[:n]), ("ring",), **_auto_axis_kw(1))
 
 
 def make_nng_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -34,4 +46,4 @@ def make_nng_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_auto_axis_kw(len(axes)))

@@ -19,6 +19,61 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+SEN = 2**31 - 1
+
+
+def run_systolic(pts, eps, mesh, *, metric="euclidean", k_cap=64,
+                 prune=True, max_grows=6):
+    """Systolic engine + re-plan loop: on overflow, grow k_cap to the exact
+    max neighbor count (cnt is always exact) and re-run. Returns
+    (nbrs, cnt, tiles_skipped, k_cap) with overflow guaranteed False."""
+    from repro.core.distributed import systolic_nng
+    for _ in range(max_grows):
+        nbrs, cnt, ovf, skipped = systolic_nng(
+            jnp.asarray(pts), float(eps), mesh, metric=metric,
+            k_cap=k_cap, prune=prune)
+        if not bool(np.asarray(ovf).any()):
+            return nbrs, cnt, skipped, k_cap
+        k_cap = max(2 * k_cap, int(np.asarray(cnt).max()))
+    raise RuntimeError(f"systolic overflow persists at k_cap={k_cap}")
+
+
+def grow_plan(plan):
+    """Double every capacity knob of a LandmarkPlan (overflow re-plan)."""
+    from repro.core.distributed import LandmarkPlan
+    return LandmarkPlan(
+        m_centers=plan.m_centers,
+        cap_coal=2 * plan.cap_coal,
+        cap_ghost=2 * plan.cap_ghost,
+        g_per_pt=min(2 * plan.g_per_pt, plan.m_centers),
+        k_cap=2 * plan.k_cap,
+    )
+
+
+def run_landmark(pts, eps, centers, f, mesh, plan, *, metric="euclidean",
+                 max_grows=6):
+    """Landmark engine + re-plan loop: on overflow, double all plan
+    capacities and re-run. Returns (outputs, plan) with the combined
+    overflow flag guaranteed False."""
+    from repro.core.distributed import landmark_nng
+    for _ in range(max_grows):
+        out = landmark_nng(
+            jnp.asarray(pts), float(eps), jnp.asarray(centers),
+            jnp.asarray(f, np.int32), mesh, plan, metric=metric)
+        if not bool(np.asarray(out[-1]).any()):
+            return out, plan
+        plan = grow_plan(plan)
+    raise RuntimeError(f"landmark overflow persists at plan={plan}")
+
+
+def edges_from_neighbor_lists(ids, nbrs):
+    """(ids (m,), nbrs (m, k)) SENTINEL-padded -> (src, dst) edge arrays."""
+    ids = np.asarray(ids)
+    nbrs = np.asarray(nbrs)
+    valid = ids != SEN
+    ii, kk = np.nonzero((nbrs != SEN) & valid[:, None])
+    return ids[ii], nbrs[ii, kk]
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -32,10 +87,11 @@ def main(argv=None):
     ap.add_argument("--k-cap", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", action="store_true")
+    ap.add_argument("--no-prune", action="store_true",
+                    help="disable block-summary tile pruning (systolic)")
     args = ap.parse_args(argv)
 
-    from repro.core.distributed import (LandmarkPlan, landmark_nng,
-                                        plan_landmark, systolic_nng)
+    from repro.core.distributed import LandmarkPlan
     from repro.core.landmark import lpt_assignment, select_centers
     from repro.core.metrics_host import get_host_metric
     from repro.data import synthetic_pointset
@@ -50,17 +106,16 @@ def main(argv=None):
           f"ranks={nranks} algo={args.algo}")
 
     t0 = time.time()
-    SEN = 2**31 - 1
     if args.algo == "systolic":
-        nbrs, cnt, ovf = systolic_nng(
-            jnp.asarray(pts), args.eps, mesh, metric=args.metric,
-            k_cap=args.k_cap)
+        nbrs, cnt, skipped, k_cap = run_systolic(
+            pts, args.eps, mesh, metric=args.metric, k_cap=args.k_cap,
+            prune=not args.no_prune)
         jax.block_until_ready(cnt)
         elapsed = time.time() - t0
-        nbrs = np.asarray(nbrs)
-        ii, kk = np.nonzero(nbrs != SEN)
-        src, dst = ii, nbrs[ii, kk]
-        overflow = bool(np.asarray(ovf).any())
+        src, dst = edges_from_neighbor_lists(np.arange(n), nbrs)
+        overflow = False
+        nskip = int(np.asarray(skipped).sum())
+        print(f"tiles_skipped={nskip} (final k_cap={k_cap})")
     else:
         met = get_host_metric(args.metric)
         m = max(2 * nranks, 32)
@@ -89,20 +144,14 @@ def main(argv=None):
             cap_ghost=int(gcnt.max()) + 8,
             g_per_pt=max(g_per_pt, 1),
             k_cap=args.k_cap)
-        Wids, wn, wc, Gids, gn, gc, ovf = landmark_nng(
-            jnp.asarray(pts), args.eps, jnp.asarray(cpts),
-            jnp.asarray(f, np.int32), mesh, plan, metric=args.metric)
+        (Wids, wn, wc, Gids, gn, gc, ovf), plan = run_landmark(
+            pts, args.eps, cpts, f, mesh, plan, metric=args.metric)
         jax.block_until_ready(wc)
         elapsed = time.time() - t0
-        src, dst = [], []
-        for idsv, nb in ((np.asarray(Wids), np.asarray(wn)),
-                         (np.asarray(Gids), np.asarray(gn))):
-            valid = idsv != SEN
-            ii, kk = np.nonzero((nb != SEN) & valid[:, None])
-            src.append(idsv[ii])
-            dst.append(nb[ii, kk])
-        src, dst = np.concatenate(src), np.concatenate(dst)
-        overflow = bool(np.asarray(ovf).any())
+        s1, d1 = edges_from_neighbor_lists(Wids, wn)
+        s2, d2 = edges_from_neighbor_lists(Gids, gn)
+        src, dst = np.concatenate([s1, s2]), np.concatenate([d1, d2])
+        overflow = False
 
     from repro.core.graph import EpsGraph
     g = EpsGraph(n, src, dst)

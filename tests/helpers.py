@@ -4,6 +4,72 @@ import sys
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
+# ---------------------------------------------------------------------------
+# hypothesis shim: property tests degrade to a fixed-seed example sweep when
+# the package is absent (the seed container ships without it). Import
+# ``given, settings, st`` from here, never from hypothesis directly.
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(
+                lambda rng: options[int(rng.integers(len(options)))])
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # NOT functools.wraps: pytest must see a ZERO-arg signature, or
+            # it would treat the property arguments as fixtures
+            def wrapper():
+                import numpy as np
+                # @settings stacks ABOVE @given, so it tags the wrapper;
+                # read the attribute at call time, not decoration time
+                n_examples = getattr(wrapper, "_max_examples", 10)
+                rng = np.random.default_rng(0xC0FFEE)
+                for i in range(n_examples):
+                    kwargs = {k: s.draw(rng) for k, s in strategies.items()}
+                    try:
+                        fn(**kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"example {i}: {kwargs!r} failed: {e}") from e
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
 
 def run_subprocess(code: str, devices: int = 8, timeout: int = 600):
     """Run python code in a subprocess with N host platform devices."""

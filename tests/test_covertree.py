@@ -1,13 +1,13 @@
 """Cover tree: construction invariants + exact query vs brute force,
-including hypothesis property tests on random metric spaces."""
+including hypothesis property tests on random metric spaces (degrading to a
+fixed-seed sweep when hypothesis is absent — see tests/helpers.py)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.brute import brute_force_graph
 from repro.core.covertree import build_covertree
 from repro.core.graph import EpsGraph
-from tests.helpers import safe_eps
+from tests.helpers import given, safe_eps, settings, st
 
 
 @pytest.mark.parametrize("n,d,seed", [(100, 3, 0), (500, 5, 1), (1000, 8, 2)])

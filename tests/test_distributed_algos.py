@@ -2,7 +2,6 @@
 produce the exact brute-force graph."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.brute import brute_force_graph
 from repro.core.host_algos import landmark_host, systolic_ring_host
@@ -10,7 +9,7 @@ from repro.core.landmark import (ghost_membership, lpt_assignment,
                                  select_centers, voronoi_assign)
 from repro.core.snn import snn_graph
 from repro.data import synthetic_pointset
-from tests.helpers import run_subprocess
+from tests.helpers import given, run_subprocess, settings, st
 
 
 def clustered(n, d, seed):
@@ -124,14 +123,15 @@ _keep = _ii < _jj
 gb = EpsGraph(n, _ii[_keep], _jj[_keep])
 mesh = make_nng_mesh(8)
 
-nbrs, cnt, ovf = systolic_nng(jnp.asarray(pts), float(eps), mesh, k_cap=512)
+nbrs, cnt, ovf, skipped = systolic_nng(jnp.asarray(pts), float(eps), mesh,
+                                       k_cap=512)
 assert not bool(np.asarray(ovf).any())
 nbrs = np.asarray(nbrs)
 ii, kk = np.nonzero(nbrs != SEN)
 assert EpsGraph(n, ii, nbrs[ii, kk]) == gb, "systolic mismatch"
 
 # overflow flag fires with tiny k_cap
-_, cnt2, ovf2 = systolic_nng(jnp.asarray(pts), eps, mesh, k_cap=1)
+_, cnt2, ovf2, _ = systolic_nng(jnp.asarray(pts), eps, mesh, k_cap=1)
 assert bool(np.asarray(ovf2).any()) == bool((np.asarray(cnt2) > 1).any())
 
 m = 24
@@ -159,8 +159,8 @@ assert EpsGraph(n, np.concatenate(src), np.concatenate(dst)) == gb, "landmark"
 hpts = synthetic_pointset(1024, 8, "hamming", seed=4)
 heps = 40
 hgb = brute_force_graph(hpts, heps, "hamming")
-nbrs, cnt, ovf = systolic_nng(jnp.asarray(hpts), heps, mesh,
-                              metric="hamming", k_cap=256)
+nbrs, cnt, ovf, skipped = systolic_nng(jnp.asarray(hpts), heps, mesh,
+                                       metric="hamming", k_cap=256)
 nbrs = np.asarray(nbrs)
 ii, kk = np.nonzero(nbrs != SEN)
 assert EpsGraph(1024, ii, nbrs[ii, kk]) == hgb, "hamming systolic"
@@ -171,3 +171,149 @@ print("DEVICE_OK")
 def test_device_engine_exact_8dev():
     out = run_subprocess(_DEVICE_CODE, devices=8)
     assert "DEVICE_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# block-summary pruning (host mirror + device fast path)
+# ---------------------------------------------------------------------------
+
+def test_host_block_pruning_fires_and_exact():
+    from repro.data import blocked_clusters
+    pts = blocked_clusters(2000, 4, 8)
+    gb = brute_force_graph(pts, 1.0)
+    g, stats = systolic_ring_host(pts, 1.0, 8)
+    assert stats.tiles_skipped > 0
+    assert stats.tiles_scheduled > stats.tiles_skipped  # self tiles remain
+    assert g == gb
+    # pruning must be a pure optimization: identical edges with it disabled
+    g2, st2 = systolic_ring_host(pts, 1.0, 8, prune=False)
+    assert st2.tiles_skipped == 0 and g2 == gb
+
+
+def test_host_block_pruning_conservative_on_mixed_blocks():
+    """Index-shuffled clusters give huge block radii: pruning never fires
+    but exactness must hold (the skip test is conservative)."""
+    from repro.data import blocked_clusters
+    pts = blocked_clusters(1200, 4, 6, seed=3)
+    pts = pts[np.random.default_rng(0).permutation(len(pts))]
+    g, stats = systolic_ring_host(pts, 1.0, 6)
+    assert stats.tiles_skipped == 0
+    assert g == brute_force_graph(pts, 1.0)
+
+
+_PRUNE_CODE = r"""
+import numpy as np, jax.numpy as jnp
+from repro.core.distributed import systolic_nng, make_nng_mesh
+from repro.core.brute import brute_force_graph
+from repro.core.graph import EpsGraph
+from repro.core.host_algos import systolic_ring_host
+
+SEN = 2**31 - 1
+rng = np.random.default_rng(0)
+from repro.data import blocked_clusters
+pts = blocked_clusters(2048, 4, 8)
+n = len(pts)
+eps = 1.0
+mesh = make_nng_mesh(8)
+
+nbrs, cnt, ovf, skipped = systolic_nng(jnp.asarray(pts), eps, mesh, k_cap=512)
+assert not bool(np.asarray(ovf).any())
+nskip = int(np.asarray(skipped).sum())
+assert nskip > 0, "clustered blocks must prune tiles"
+ii, kk = np.nonzero(np.asarray(nbrs) != SEN)
+g = EpsGraph(n, ii, np.asarray(nbrs)[ii, kk])
+gb = brute_force_graph(pts, eps)
+assert g == gb, "device pruned graph != brute force"
+gh, stats = systolic_ring_host(pts, eps, 8)
+assert g == gh, "device pruned graph != host systolic"
+assert stats.tiles_skipped > 0
+
+# pruning off -> same edges, zero skip counter
+nbrs2, _, ovf2, skipped2 = systolic_nng(jnp.asarray(pts), eps, mesh,
+                                        k_cap=512, prune=False)
+assert not bool(np.asarray(ovf2).any())
+assert int(np.asarray(skipped2).sum()) == 0
+ii2, kk2 = np.nonzero(np.asarray(nbrs2) != SEN)
+assert EpsGraph(n, ii2, np.asarray(nbrs2)[ii2, kk2]) == gb
+
+# hamming fast path: per-block bit-cluster centers, far apart in popcount
+nblocks, w = 8, 8
+hctr = rng.integers(0, 2**32, size=(nblocks, w), dtype=np.uint32)
+hpts = np.repeat(hctr, 128, axis=0)
+nh = len(hpts)
+word = rng.integers(0, w, size=(nh, 3))
+bit = rng.integers(0, 32, size=(nh, 3)).astype(np.uint32)
+for t in range(3):  # flip <=3 bits per point: intra<=6, inter~128
+    hpts[np.arange(nh), word[:, t]] ^= (np.uint32(1) << bit[:, t])
+heps = 12
+hnbrs, hcnt, hovf, hskip = systolic_nng(jnp.asarray(hpts), heps, mesh,
+                                        metric="hamming", k_cap=256)
+assert not bool(np.asarray(hovf).any())
+assert int(np.asarray(hskip).sum()) > 0, "hamming blocks must prune"
+hi, hk = np.nonzero(np.asarray(hnbrs) != SEN)
+hg = EpsGraph(nh, hi, np.asarray(hnbrs)[hi, hk])
+assert hg == brute_force_graph(hpts, heps, "hamming"), "hamming pruned graph"
+hgh, hstats = systolic_ring_host(hpts, heps, 8, metric="hamming")
+assert hg == hgh and hstats.tiles_skipped > 0
+print("PRUNE_OK")
+"""
+
+
+def test_device_systolic_pruning_8dev():
+    out = run_subprocess(_PRUNE_CODE, devices=8)
+    assert "PRUNE_OK" in out
+
+
+_REPLAN_CODE = r"""
+import numpy as np, jax.numpy as jnp
+from repro.core.distributed import (LandmarkPlan, make_nng_mesh, systolic_nng)
+from repro.core.landmark import lpt_assignment, select_centers
+from repro.core.metrics_host import get_host_metric
+from repro.core.graph import EpsGraph
+from repro.data import synthetic_pointset
+from repro.launch.nng_run import (edges_from_neighbor_lists, run_landmark,
+                                  run_systolic)
+
+SEN = 2**31 - 1
+n = 1024
+pts = synthetic_pointset(n, 6, "euclidean", seed=11)
+from repro.core.distributed.device import tile_cdist
+eps = 1.0
+_d2 = np.asarray(tile_cdist(jnp.asarray(pts), jnp.asarray(pts), "euclidean"))
+_ii, _jj = np.nonzero(_d2 <= eps * eps)
+_keep = _ii < _jj
+gb = EpsGraph(n, _ii[_keep], _jj[_keep])
+mesh = make_nng_mesh(8)
+
+# k_cap=1 must overflow, then the driver grows it to the exact max count
+_, cnt1, ovf1, _ = systolic_nng(jnp.asarray(pts), eps, mesh, k_cap=1)
+assert bool(np.asarray(ovf1).any()), "k_cap=1 must overflow on this input"
+nbrs, cnt, skipped, k_final = run_systolic(pts, eps, mesh, k_cap=1)
+assert k_final >= int(np.asarray(cnt).max())
+ii, kk = np.nonzero(np.asarray(nbrs) != SEN)
+assert EpsGraph(n, ii, np.asarray(nbrs)[ii, kk]) == gb, "replanned systolic"
+
+# landmark: undersized caps everywhere; driver doubles until exact
+rng = np.random.default_rng(1)
+met = get_host_metric("euclidean")
+m = 16
+cidx = select_centers(n, m, rng)
+cpts = pts[cidx]
+cell = np.argmin(met.cdist(pts, cpts), axis=1)
+f = lpt_assignment(np.bincount(cell, minlength=m), 8)
+tiny = LandmarkPlan(m_centers=m, cap_coal=8, cap_ghost=8, g_per_pt=1, k_cap=2)
+(Wids, wn, wc, Gids, gn, gc, ovf), plan = run_landmark(
+    pts, eps, cpts, f, mesh, tiny, max_grows=10)
+assert not bool(np.asarray(ovf).any())
+assert plan.k_cap > 2 and plan.cap_coal > 8, "plan must have grown"
+s1, d1 = edges_from_neighbor_lists(Wids, wn)
+s2, d2 = edges_from_neighbor_lists(Gids, gn)
+g = EpsGraph(n, np.concatenate([s1, s2]), np.concatenate([d1, d2]))
+assert g == gb, "replanned landmark"
+print("REPLAN_OK")
+"""
+
+
+def test_overflow_replan_drivers_8dev():
+    out = run_subprocess(_REPLAN_CODE, devices=8)
+    assert "REPLAN_OK" in out

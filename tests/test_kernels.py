@@ -95,3 +95,122 @@ def test_nng_tile_fused(q, p, d, eps):
     loose = ((d2 <= eps**2 - 1e-5) & (valid != 0)[None, :])
     assert ((hits.astype(bool) | want) == want).all()   # no false positives*
     assert (loose <= hits.astype(bool)).all()           # no false negatives*
+
+
+@pytest.mark.parametrize("q,p,w,eps", [
+    (128, 256, 8, 40), (128, 512, 16, 100), (256, 256, 8, 3),
+])
+def test_nng_tile_hamming_fused(q, p, w, eps):
+    from repro.kernels.nng_tile import (nng_tile_hamming_pallas,
+                                        nng_tile_hamming_ref)
+    x = RNG.integers(0, 2**32, size=(q, w), dtype=np.uint32)
+    y = RNG.integers(0, 2**32, size=(p, w), dtype=np.uint32)
+    valid = (RNG.random(p) > 0.1).astype(np.int32)
+    cnt, bits = nng_tile_hamming_pallas(x, y, valid, eps, interpret=True)
+    cw, bw = nng_tile_hamming_ref(x, y, valid, eps)
+    assert (np.asarray(cnt) == np.asarray(cw)).all()
+    assert (np.asarray(bits) == np.asarray(bw)).all()
+    # exact integer semantics vs numpy popcount
+    dist = np.bitwise_count(x[:, None, :] ^ y[None, :, :]).sum(-1)
+    want = (dist <= eps) & (valid != 0)[None, :]
+    hits = np.unpackbits(
+        np.asarray(bits).view(np.uint8), axis=1, bitorder="little")[:, :p]
+    assert (hits.astype(bool) == want).all()
+
+
+@pytest.mark.parametrize("metric,q,p,d", [
+    ("euclidean", 100, 200, 7),     # row-pad both operands
+    ("euclidean", 300, 515, 40),    # p not a multiple of 32
+    ("euclidean", 8, 31, 3),        # tiny, heavy padding
+    ("hamming", 100, 190, 5),
+    ("hamming", 130, 257, 9),
+])
+def test_nng_tile_bits_wrapper_padding(metric, q, p, d):
+    """ops.nng_tile_bits pads internally; pad rows/cols must never leak
+    into cnt or bits, and trailing bits past column p-1 must be zero."""
+    from repro.kernels import nng_tile_bits
+    from repro.kernels.nng_tile import nng_tile_hamming_ref, nng_tile_ref
+    if metric == "euclidean":
+        x = RNG.normal(size=(q, d)).astype(np.float32)
+        y = RNG.normal(size=(p, d)).astype(np.float32)
+        eps, reff = 1.5, nng_tile_ref
+    else:
+        x = RNG.integers(0, 2**32, size=(q, d), dtype=np.uint32)
+        y = RNG.integers(0, 2**32, size=(p, d), dtype=np.uint32)
+        eps, reff = 16 * d, nng_tile_hamming_ref
+    valid = (RNG.random(p) > 0.2).astype(np.int32)
+    cnt, bits = nng_tile_bits(x, y, valid, eps, metric=metric)
+    nw = -(-p // 32)
+    assert cnt.shape == (q,) and bits.shape == (q, nw)
+    p32 = nw * 32
+    yp = np.zeros((p32, d), y.dtype)
+    yp[:p] = y
+    vp = np.zeros((p32,), np.int32)
+    vp[:p] = valid
+    cw, bw = reff(x, yp, vp, eps)
+    assert (np.asarray(cnt) == np.asarray(cw)).all()
+    assert (np.asarray(bits) == np.asarray(bw)).all()
+    # y_valid masking: invalid columns contribute no bits
+    hits = np.unpackbits(
+        np.asarray(bits).view(np.uint8), axis=1, bitorder="little")
+    assert not hits[:, p:].any()
+    assert not hits[:, :p][:, valid == 0].any()
+    # cnt/popcount identity: cnt is exactly the row-sum of set bits
+    assert (np.asarray(cnt)
+            == np.bitwise_count(np.asarray(bits)).sum(axis=1)).all()
+
+
+def test_nng_tile_bit_order():
+    """Little-endian packing contract: hit in column c sets word c // 32,
+    bit c % 32 — the id extraction in the device engine depends on it."""
+    from repro.kernels.nng_tile import nng_tile_ref
+    p = 96
+    for col in (0, 1, 31, 32, 50, 95):
+        x = np.zeros((1, 2), np.float32)
+        y = np.full((p, 2), 100.0, np.float32)
+        y[col] = 0.0                      # the only point within eps
+        valid = np.ones(p, np.int32)
+        cnt, bits = nng_tile_ref(x, y, valid, 1.0)
+        assert int(cnt[0]) == 1
+        expect = np.zeros(3, np.uint32)
+        expect[col // 32] = np.uint32(1) << np.uint32(col % 32)
+        assert (np.asarray(bits[0]) == expect).all(), col
+
+
+def test_nng_tile_interpret_matches_wrapper_jnp():
+    """The interpret-mode Pallas path and the jnp fallback must agree
+    bit-for-bit on the packed output."""
+    from repro.kernels import nng_tile_bits
+    x = RNG.normal(size=(60, 12)).astype(np.float32)
+    y = RNG.normal(size=(75, 12)).astype(np.float32)
+    valid = (RNG.random(75) > 0.15).astype(np.int32)
+    ci, bi = nng_tile_bits(x, y, valid, 2.0)
+    os.environ["REPRO_PALLAS"] = "jnp"
+    try:
+        cj, bj = nng_tile_bits(x, y, valid, 2.0)
+    finally:
+        os.environ["REPRO_PALLAS"] = "interpret"
+    assert (np.asarray(ci) == np.asarray(cj)).all()
+    assert (np.asarray(bi) == np.asarray(bj)).all()
+
+
+def test_bits_to_ids_extraction():
+    """Device-engine bitmask -> sorted-id extraction against a direct
+    nonzero() reference, across k regimes (k < words, k > columns)."""
+    import jax.numpy as jnp
+    from repro.core.distributed.device import SENTINEL, _bits_to_ids
+    m, p = 40, 256
+    mask = RNG.random((m, p)) < 0.05
+    mask[3] = False                       # an empty row
+    words = np.zeros((m, p // 32), np.uint32)
+    for c in range(p):
+        words[:, c // 32] |= (mask[:, c].astype(np.uint32)
+                              << np.uint32(c % 32))
+    id0 = 1000
+    for k in (1, 4, 64, 300):
+        got = np.asarray(_bits_to_ids(jnp.asarray(words), id0, k))
+        for i in range(m):
+            ids = np.flatnonzero(mask[i]) + id0
+            want = ids[:k]
+            assert (got[i, :len(want)] == want).all(), (i, k)
+            assert (got[i, len(want):] == int(SENTINEL)).all(), (i, k)

@@ -9,15 +9,17 @@ def test_analyzer_counts_loop_flops_and_collectives():
     code = r"""
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.launch.mesh import make_ring_mesh
 from repro.roofline import analyze_hlo
-mesh = jax.make_mesh((8,), ("ring",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_ring_mesh(8)
 def body(x):
     def step(i, y):
         y = jax.lax.ppermute(y, "ring", [(i,(i+1)%8) for i in range(8)])
         return y @ jnp.ones((32, 32), jnp.float32)
     return jax.lax.fori_loop(0, 8, step, x)
-fn = jax.shard_map(body, mesh=mesh, in_specs=P("ring", None),
-                   out_specs=P("ring", None))
+fn = shard_map(body, mesh, in_specs=P("ring", None),
+               out_specs=P("ring", None))
 comp = jax.jit(fn).lower(jax.ShapeDtypeStruct((64, 32), jnp.float32)).compile()
 st = analyze_hlo(comp.as_text())
 assert st.flops == 8*2*8*32*32, st.flops
@@ -35,8 +37,7 @@ from repro.launch.mesh import make_test_mesh
 from repro import sharding as shd
 from repro.models import get_config, init_params
 
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_test_mesh((2, 2), ("data", "model"))
 cfg = get_config("glm4-9b").smoke()
 shapes = jax.eval_shape(lambda k: init_params(cfg, k),
                         jax.ShapeDtypeStruct((2,), jnp_uint:=jax.numpy.uint32))
