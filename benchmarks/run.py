@@ -1,5 +1,13 @@
 """Benchmark harness entry: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV."""
+Prints ``name,us_per_call,derived`` CSV; the landmark-device bench also
+emits machine-readable ``BENCH_landmark.json`` (edges/s, comm bytes,
+grouped-tile skip rate, dense-vs-bitmask tile-byte accounting) so CI can
+track the perf trajectory.
+
+  python benchmarks/run.py                  # full sweep
+  python benchmarks/run.py --only landmark  # just the landmark JSON bench
+"""
+import argparse
 import os
 import sys
 
@@ -7,17 +15,42 @@ _ROOT = os.path.join(os.path.dirname(__file__), "..")
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 sys.path.insert(0, _ROOT)  # so `benchmarks.tables` resolves when run as a script
 
+# 8 simulated devices for the device-engine benches (must precede jax
+# import; APPEND so a pre-existing XLA_FLAGS — e.g. --xla_dump_to — doesn't
+# silently drop the forcing and produce an incomparable nranks=1 JSON)
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8").strip()
 
-def main() -> None:
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run only benches whose name contains this substring")
+    ap.add_argument("--landmark-json", default="BENCH_landmark.json",
+                    help="output path for the landmark perf JSON")
+    args = ap.parse_args(argv)
+
     from benchmarks import tables
+    benches = [
+        ("datasets", tables.bench_datasets),              # Table I
+        ("covertree_vs_snn", tables.bench_covertree_vs_snn),  # Table III
+        ("speedup_over_snn", tables.bench_speedup_over_snn),  # Table II
+        ("strong_scaling", tables.bench_strong_scaling),  # Fig 2
+        ("phase_breakdown", tables.bench_phase_breakdown),  # Figs 3-5
+        ("block_pruning", tables.bench_block_pruning),    # systolic skip rates
+        ("landmark_device",                               # landmark fast path
+         lambda: tables.bench_landmark_device(args.landmark_json)),
+        ("distance_kernels", tables.bench_distance_kernels),  # kernel layer
+    ]
+    selected = [(n, f) for n, f in benches
+                if not args.only or args.only in n]
+    if not selected:
+        raise SystemExit(f"--only {args.only!r} matched no bench "
+                         f"(have: {', '.join(n for n, _ in benches)})")
     print("name,us_per_call,derived")
-    tables.bench_datasets()            # Table I
-    tables.bench_covertree_vs_snn()    # Table III
-    tables.bench_speedup_over_snn()    # Table II
-    tables.bench_strong_scaling()      # Fig 2
-    tables.bench_phase_breakdown()     # Figs 3-5
-    tables.bench_block_pruning()       # sparsity: tile-skip rates
-    tables.bench_distance_kernels()    # kernel layer
+    for _, fn in selected:
+        fn()
 
 
 if __name__ == "__main__":

@@ -159,7 +159,13 @@ class CoverTree:
             if hit.any():
                 q_hits.append(fq[hit])
                 p_hits.append(self.node_pt[fv[hit]])
-            expand = (~leaf) & (~incl) & (d <= self.node_radius[fv] + eps + 1e-9)
+            # triangle-inequality prune with SCALE-RELATIVE fp slack: d and
+            # the stored radii are float64 sqrt values whose rounding is
+            # ~1e-16 relative — an absolute 1e-9 is exceeded once distances
+            # reach ~1e7 and knife-edge (collinear) geometry then silently
+            # drops exact neighbors. Over-expansion is always safe.
+            bound = self.node_radius[fv] + eps
+            expand = (~leaf) & (~incl) & (d <= bound + 1e-9 + 1e-12 * (d + bound))
             ev, eq = fv[expand], fq[expand]
             counts = (self.child_start[ev + 1] - self.child_start[ev]).astype(np.int64)
             fq = np.repeat(eq, counts)

@@ -24,8 +24,21 @@ This is the TPU-native, *sparsity-aware* realization described in DESIGN.md
 
 - ``landmark_nng`` — Algorithms 5 + 6. Voronoi assignment against replicated
   centers (one (n_loc × m) MXU tile), cell coalescing and ε-ghost exchange as
-  capacity-padded ``jax.lax.all_to_all`` (the MPI_Alltoallv adaptation), then
-  masked intra-cell / ghost distance tiles.
+  capacity-padded ``jax.lax.all_to_all`` (the MPI_Alltoallv adaptation). The
+  coalesce (W) and ghost (G) buffers are then *cell-sorted* (padding rows
+  clustered at the end, cells contiguous) and the intra-cell W×W and ghost
+  G×W phases run the group-aware fused bitmask tile kernel
+  (``repro.kernels.nng_tile_bits_grouped``): the ε-threshold, cell-id
+  equality, validity, and self-pair exclusion are all applied in VMEM and
+  only packed uint32 adjacency words + exact per-row counts reach HBM — no
+  dense (nranks·cap)² distance tile or boolean mask is ever materialized.
+  Whole tile blocks that are all-padding or cross-cell are skipped inside
+  the kernel (group [min, max] range disjointness over the sorted buffers),
+  reported per rank via ``tiles_skipped`` / ``tiles_scheduled`` counters
+  like the systolic engine's. Neighbor ids are recovered from the bitmask
+  by the same two-level extraction as the ring path (``_bits_to_cols`` +
+  a gather through the cell-sorted id table), and the Lemma-1 ghost test
+  carries a scale-aware fp32 slack so boundary ghosts are never dropped.
 
 Everything is shape-static: neighbor lists are (·, K) id arrays padded with
 INT32_MAX, counts are exact, and overflow flags report capacity misses so the
@@ -48,7 +61,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map as _shard_map
-from repro.kernels import nng_tile_bits
+from repro.kernels import nng_tile_bits, nng_tile_bits_grouped
+from repro.kernels.ops import pallas_mode as _pallas_mode
 
 SENTINEL = jnp.int32(2**31 - 1)
 
@@ -84,37 +98,21 @@ def _merge_ids(buf, new_ids):
     return jnp.sort(cat, axis=-1)[..., :k]
 
 
-def _hits_to_ids(mask, ids_row, k):
-    """Per-row: the k smallest hit ids, SENTINEL-padded.
-
-    Perf note (§Perf iteration): a full row sort is O(w log^2 w) bitonic
-    passes over the whole tile in HBM; top_k is a partial selection — the
-    dominant memory cost of the systolic step after the distance tile
-    itself. top_k of the NEGATED ids returns the largest -id = smallest id.
-    """
-    w = mask.shape[-1]
-    if k >= w:
-        cand = jnp.where(mask, ids_row[None, :], SENTINEL)
-        out = jnp.sort(cand, axis=-1)
-        pad = jnp.full(out.shape[:-1] + (k - w,), SENTINEL, dtype=out.dtype)
-        return jnp.concatenate([out, pad], axis=-1) if k > w else out
-    neg = jnp.where(mask, -ids_row[None, :].astype(jnp.int32), -SENTINEL)
-    top, _ = jax.lax.top_k(neg, k)
-    return jnp.where(top == -SENTINEL, SENTINEL, -top)
+_NOCOL = jnp.int32(2**30)       # "no set bit" column sentinel
 
 
-def _bits_to_ids(bits, id0, k):
-    """Vectorized bitmask -> k-smallest hit ids (sorted, SENTINEL-padded).
+def _bits_to_cols(bits, k):
+    """Vectorized bitmask -> k lowest set-bit columns (ascending, padded
+    with ``_NOCOL``).
 
     bits: (m, W) uint32 packed hit masks (little-endian; column c of the
-    tile is word c // 32, bit c % 32); the id of column c is ``id0 + c``
-    (global ids are block-contiguous by construction).
+    tile is word c // 32, bit c % 32).
 
-    Two-level selection avoids the old O(m·n log n) sort over the full tile:
-    the k smallest set-bit positions of a row lie inside its k lowest-
-    indexed NONZERO words, so we top_k over the (m, W) word-occupancy map
-    (32× smaller than the tile), gather + unpack only those k words, and
-    top_k the resulting 32k candidates.
+    Two-level selection avoids an O(m·n log n) sort over the full tile:
+    the k lowest set-bit columns of a row lie inside its k lowest-indexed
+    NONZERO words, so we top_k over the (m, W) word-occupancy map (32×
+    smaller than the tile), gather + unpack only those k words, and top_k
+    the resulting 32k candidate columns.
     """
     m, W = bits.shape
     kw = min(k, W)
@@ -126,18 +124,40 @@ def _bits_to_ids(bits, id0, k):
     words = jnp.where(widx < W, words, jnp.uint32(0))
     bitpos = jnp.arange(32, dtype=jnp.uint32)
     set_ = ((words[:, :, None] >> bitpos[None, None, :]) & 1) == 1
-    cand = (id0 + widx[:, :, None] * 32
-            + bitpos.astype(jnp.int32)[None, None, :])
-    cand = jnp.where(set_, cand, SENTINEL).reshape(m, kw * 32)
+    cols = widx[:, :, None] * 32 + bitpos.astype(jnp.int32)[None, None, :]
+    cand = jnp.where(set_, cols, _NOCOL).reshape(m, kw * 32)
     c = kw * 32
     if k >= c:
         out = jnp.sort(cand, axis=-1)
         if k > c:
-            pad = jnp.full((m, k - c), SENTINEL, dtype=out.dtype)
+            pad = jnp.full((m, k - c), _NOCOL, dtype=out.dtype)
             out = jnp.concatenate([out, pad], axis=-1)
         return out
-    top, _ = jax.lax.top_k(-cand, k)
-    return jnp.where(top == -SENTINEL, SENTINEL, -top)
+    top, _ = jax.lax.top_k(-cand, k)           # ascending cand
+    return -top
+
+
+def _bits_to_ids(bits, id0, k):
+    """Bitmask -> k-smallest hit ids (sorted, SENTINEL-padded) when the id
+    of column c is ``id0 + c`` (block-contiguous ids, systolic path)."""
+    cols = _bits_to_cols(bits, k)
+    return jnp.where(cols < _NOCOL, id0 + cols, SENTINEL)
+
+
+def _bits_to_gathered_ids(bits, ids_row, k):
+    """Bitmask -> hit ids for ARBITRARY per-column ids (landmark path:
+    columns are cell-sorted coalesce-buffer rows, so ids are scattered).
+
+    Gathers ``ids_row`` at the k lowest set-bit columns, then sorts each
+    row ascending so the output is canonical (sorted ids, SENTINEL-padded)
+    exactly like the dense-mask extraction it replaces. Exact whenever the
+    row's popcount <= k — which overflow detection (cnt > k_cap) already
+    guarantees before results are trusted."""
+    cols = _bits_to_cols(bits, k)
+    p = ids_row.shape[0]
+    g = jnp.where(cols < p, jnp.take(ids_row, jnp.minimum(cols, p - 1)),
+                  SENTINEL)
+    return jnp.sort(g, axis=-1)
 
 
 def _popcount_rows(bits):
@@ -289,6 +309,29 @@ def make_nng_mesh(nranks: int | None = None) -> Mesh:
     return Mesh(devs, ("ring",))
 
 
+@functools.lru_cache(maxsize=64)
+def _systolic_fn(mesh, eps, metric, k_cap, axis, prune, pallas_mode):
+    """Memoized jitted shard_map program: rebuilding the closure per call
+    defeats the jit cache (every invocation would retrace + recompile, and
+    compile dominates wall clock on re-plan loops / benchmarks). Mesh and
+    the capacity knobs are hashable, so the same engine configuration
+    always returns the SAME callable and jit caching works.
+
+    ``pallas_mode`` (the resolved REPRO_PALLAS value) is part of the key
+    because the tile wrappers read it at TRACE time — without it, flipping
+    the env mid-process would silently reuse a program traced under the
+    old mode."""
+    nranks = mesh.shape[axis]
+    body = functools.partial(
+        _systolic_local, axis=axis, nranks=nranks, eps=eps,
+        metric=metric, k_cap=k_cap, prune=prune)
+    return jax.jit(_shard_map(
+        body, mesh,
+        in_specs=(P(axis, None), P(axis)),
+        out_specs=(P(axis, None), P(axis), P(axis), P(axis)),
+    ))
+
+
 def systolic_nng(
     points,
     eps: float,
@@ -316,20 +359,9 @@ def systolic_nng(
     n, _ = points.shape
     assert n % nranks == 0, (n, nranks)
     ids = jnp.arange(n, dtype=jnp.int32)
-
-    body = functools.partial(
-        _systolic_local, axis=axis, nranks=nranks, eps=float(eps),
-        metric=metric, k_cap=k_cap, prune=prune)
-    fn = _shard_map(
-        body, mesh,
-        in_specs=(P(axis, None), P(axis)),
-        out_specs=(P(axis, None), P(axis), P(axis), P(axis)),
-    )
+    fn = _systolic_fn(mesh, float(eps), metric, k_cap, axis, prune,
+                      _pallas_mode())
     return fn(points, ids)
-
-
-def _comparable(eps: float, metric: str) -> float:
-    return float(eps) ** 2 if metric == "euclidean" else float(eps)
 
 
 # ---------------------------------------------------------------------------
@@ -387,8 +419,51 @@ def _pack_by_dest(dest, valid, payload, nranks: int, cap: int):
     return out, dropped
 
 
+def _lemma1_ghost_bound(x, centers, dpc, d_min, two_eps_c, metric):
+    """Slacked Lemma-1 ghost bound: (tru, bound) with p a ghost candidate
+    of cell i iff ``tru[p, i] <= bound[p]``.
+
+    The raw test is d(p, c_i) <= d(p, C) + 2ε in TRUE distance. Both sides
+    come out of the fp32 BLAS3 expansion, whose cancellation error is
+    O(u · (‖p‖ + ‖c‖)²); propagated through sqrt at magnitude ``bound``
+    that is O(u · scale² / bound) — an ABSOLUTE 0 slack (the pre-fix code)
+    silently drops boundary ghosts on large-magnitude data, losing exact
+    edges. The guard is scale-aware like the block-summary prune slack and
+    PER-POINT (each row's slack scales with its own ‖p‖², so mixed-scale
+    data only over-ghosts where the fp32 error is actually large):
+    over-inclusion only costs extra ghost copies (capacity overflow
+    re-plans handle it), under-inclusion is never recoverable.
+    """
+    if metric != "euclidean":
+        return dpc, d_min + two_eps_c           # integer distances: exact
+    tru = jnp.sqrt(dpc)
+    bound = jnp.sqrt(d_min) + two_eps_c
+    xf = x.astype(jnp.float32)
+    cf = centers.astype(jnp.float32)
+    sx = jnp.sum(xf * xf, axis=-1)              # (n_loc,) per-point ‖p‖²
+    sc = jnp.max(jnp.sum(cf * cf, axis=-1))     # worst center the row meets
+    scale2 = sx + sc + 2.0 * jnp.sqrt(sx * sc)  # >= (‖p‖ + max‖c‖)² per row
+    # DIMENSION-AWARE error coefficient: the BLAS3 accumulation error in
+    # dpc grows ~√d with the contraction length, so a fixed few-ulp
+    # multiple validated at low d would still drop boundary ghosts on
+    # sift-like d=128 data
+    coef = jnp.float32((8.0 + 2.0 * float(np.sqrt(x.shape[1]))) * 6e-8)
+    slack = (coef * scale2 / jnp.maximum(bound, jnp.float32(1e-30))
+             + jnp.float32(1e-5) * bound + jnp.float32(1e-6))
+    return tru, bound + slack
+
+
+def _cell_sort(key_cell, valid, m, *arrays):
+    """Cell-sorted compaction: stable-sort rows so cells are contiguous and
+    padding rows (key m) cluster at the end — the layout that makes the
+    grouped kernel's per-tile group ranges tight enough to skip whole
+    all-padding / cross-cell blocks."""
+    order = jnp.argsort(jnp.where(valid, key_cell, jnp.int32(m)))
+    return tuple(a[order] for a in arrays)
+
+
 def _landmark_local(
-    x, ids, centers, f, *, axis, nranks, ceps, two_eps_c, metric, plan
+    x, ids, centers, f, *, axis, nranks, eps, two_eps_c, metric, plan
 ):
     """Per-shard landmark body. x (n_loc, d); centers (m, d) replicated;
     f (m,) cell->rank assignment (host-planned LPT)."""
@@ -417,29 +492,22 @@ def _landmark_local(
     Wids = recv["ids"].reshape(-1)
     Wcell = recv["cell"].reshape(-1)
     Wvalid = Wids != SENTINEL
+    W, Wids, Wcell, Wvalid = _cell_sort(
+        Wcell, Wvalid, m, W, Wids, Wcell, Wvalid)
+    Wgrp = jnp.where(Wvalid, Wcell, jnp.int32(-1))
 
-    # -- Phase 3: intra-cell queries (masked tile; the per-cell cover-tree
-    # prune becomes the same-cell mask — cells are the level-1 cover) -------
-    dww = tile_cdist(W, W, metric)
-    mask = (
-        (dww <= ceps)
-        & (Wcell[:, None] == Wcell[None, :])
-        & Wvalid[:, None] & Wvalid[None, :]
-        & (Wids[:, None] != Wids[None, :])
-    )
-    cnt = jnp.sum(mask.astype(jnp.int32), axis=1)
-    nbrs = _hits_to_ids(mask, Wids, plan.k_cap)
+    # -- Phase 3: intra-cell queries (group-aware fused bitmask tile; the
+    # per-cell cover-tree prune becomes the fused same-cell test — cells
+    # are the level-1 cover). Only packed adjacency words + exact counts
+    # reach HBM; all-padding / cross-cell blocks are skipped in-kernel. ----
+    cnt, bits, w_sched, w_skip = nng_tile_bits_grouped(
+        W, W, Wgrp, Wgrp, Wids, Wids, eps, metric=metric)
+    nbrs = _bits_to_gathered_ids(bits, Wids, plan.k_cap)
 
-    # -- Phase 4: ε-ghost exchange (Lemma 1) --------------------------------
-    # ghost condition in comparable space: for L2, d(p,c_i) <= d(p,C) + 2eps
-    # must be tested in TRUE distance; both metrics handled via true-space.
-    if metric == "euclidean":
-        tru = jnp.sqrt(dpc)
-        bound = jnp.sqrt(d_min) + two_eps_c
-    else:
-        tru = dpc
-        bound = d_min + two_eps_c
-    gmask = (tru <= bound[:, None]) & (
+    # -- Phase 4: ε-ghost exchange (Lemma 1, scale-aware fp32 slack) --------
+    tru, gbound = _lemma1_ghost_bound(x, centers, dpc, d_min, two_eps_c,
+                                      metric)
+    gmask = (tru <= gbound[:, None]) & (
         jnp.arange(m)[None, :] != cell[:, None])
     # cap ghost fanout per point: keep the g_per_pt nearest ghost cells
     gscore = jnp.where(gmask, tru, jnp.float32(3e38))
@@ -465,22 +533,26 @@ def _landmark_local(
     Gids = grecv["ids"].reshape(-1)
     Gcell = grecv["cell"].reshape(-1)
     Gvalid = Gids != SENTINEL
+    G, Gids, Gcell, Gvalid = _cell_sort(
+        Gcell, Gvalid, m, G, Gids, Gcell, Gvalid)
+    Ggrp = jnp.where(Gvalid, Gcell, jnp.int32(-1))
 
-    dgw = tile_cdist(G, W, metric)
-    gw_mask = (
-        (dgw <= ceps)
-        & (Gcell[:, None] == Wcell[None, :])
-        & Gvalid[:, None] & Wvalid[None, :]
-        & (Gids[:, None] != Wids[None, :])
-    )
-    gcnt = jnp.sum(gw_mask.astype(jnp.int32), axis=1)
-    gnbrs = _hits_to_ids(gw_mask, Wids, plan.k_cap)
+    # ghost G×W queries through the same grouped fused tile (a ghost copy
+    # carries its TARGET cell id, so group equality scopes it to that cell;
+    # its own W row sits in a different cell and is excluded by the group
+    # test — and id inequality guards the degenerate single-cell case).
+    gcnt, gbits, g_sched, g_skip = nng_tile_bits_grouped(
+        G, W, Ggrp, Wgrp, Gids, Wids, eps, metric=metric)
+    gnbrs = _bits_to_gathered_ids(gbits, Wids, plan.k_cap)
 
     overflow = (
         (dropped_c > 0) | (dropped_g > 0) | (g_dropped > 0)
         | jnp.any(cnt > plan.k_cap) | jnp.any(gcnt > plan.k_cap)
     )[None]
-    return Wids, nbrs, cnt, Gids, gnbrs, gcnt, overflow
+    tiles_skipped = (w_skip + g_skip)[None]
+    tiles_scheduled = (w_sched + g_sched)[None]
+    return (Wids, nbrs, cnt, Gids, gnbrs, gcnt, overflow,
+            tiles_skipped, tiles_scheduled)
 
 
 def landmark_nng(
@@ -495,25 +567,35 @@ def landmark_nng(
     axis: str = "ring",
 ):
     """Distributed landmark ε-NNG (collective ghosts). Returns
-    (Wids, nbrs, cnt, Gids, gnbrs, gcnt, overflow): owned-point and
-    ghost-copy neighbor lists keyed by global point id. The union of
-    (Wids → nbrs) and (Gids → gnbrs) edges is the exact ε-graph when
-    ``overflow`` is False.
+    (Wids, nbrs, cnt, Gids, gnbrs, gcnt, overflow, tiles_skipped,
+    tiles_scheduled): owned-point and ghost-copy neighbor lists keyed by
+    global point id, plus per-rank (nranks,) int32 counters of grouped-tile
+    blocks skipped/scheduled by the cell-sorted fast path (Phases 3 + 4).
+    The union of (Wids → nbrs) and (Gids → gnbrs) edges is the exact
+    ε-graph when ``overflow`` is False.
     """
     nranks = mesh.shape[axis]
     n, _ = points.shape
     assert n % nranks == 0, (n, nranks)
-    ceps = _comparable(eps, metric)
-    two_eps_c = 2.0 * float(eps)
     ids = jnp.arange(n, dtype=jnp.int32)
+    fn = _landmark_fn(mesh, float(eps), metric, plan, axis, _pallas_mode())
+    return fn(points, ids, centers, f)
 
+
+@functools.lru_cache(maxsize=64)
+def _landmark_fn(mesh, eps, metric, plan, axis, pallas_mode):
+    """Memoized jitted shard_map program (see ``_systolic_fn``, including
+    the ``pallas_mode`` key); the frozen ``LandmarkPlan`` is the static
+    capacity key, so only genuine re-plans (grown capacities) pay a
+    recompile."""
+    nranks = mesh.shape[axis]
     body = functools.partial(
-        _landmark_local, axis=axis, nranks=nranks, ceps=ceps,
-        two_eps_c=two_eps_c, metric=metric, plan=plan)
-    fn = _shard_map(
+        _landmark_local, axis=axis, nranks=nranks, eps=eps,
+        two_eps_c=2.0 * eps, metric=metric, plan=plan)
+    return jax.jit(_shard_map(
         body, mesh,
         in_specs=(P(axis, None), P(axis), P(), P()),
         out_specs=(P(axis), P(axis, None), P(axis),
-                   P(axis), P(axis, None), P(axis), P(axis)),
-    )
-    return fn(points, ids, centers, f)
+                   P(axis), P(axis, None), P(axis), P(axis),
+                   P(axis), P(axis)),
+    ))

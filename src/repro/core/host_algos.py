@@ -120,14 +120,20 @@ def systolic_ring_host(
     for r in range(nranks // 2 + 1):
         for j in range(nranks):
             b = (j + r) % nranks
+            if r > 0:
+                # every rank receives the visiting block every ring round —
+                # including the half of the halving round whose tile is
+                # evaluated by the mirror rank below (the block still
+                # rotates; only the query is elided)
+                ring_bytes += int(starts[b + 1] - starts[b]) * point_bytes
             if r == 0 and b != j:
                 continue
             if nranks % 2 == 0 and r == nranks // 2 and j >= b:
                 continue  # halving round: evaluate each unordered pair once
-            if r > 0:
-                ring_bytes += int(starts[b + 1] - starts[b]) * point_bytes
             stats.tiles_scheduled += 1
-            if prune and dcc[j, b] > radii[j] + radii[b] + eps + 1e-9:
+            bound = radii[j] + radii[b] + eps
+            # same scale-relative slack formula as CoverTree.query's prune
+            if prune and dcc[j, b] > bound + 1e-9 + 1e-12 * (dcc[j, b] + bound):
                 stats.tiles_skipped += 1
                 continue
             tq0 = time.perf_counter()
@@ -144,6 +150,30 @@ def systolic_ring_host(
         np.concatenate(dst) if dst else np.zeros(0, np.int64),
     )
     return g, stats
+
+
+def grouped_tile_schedule(
+    x_groups: np.ndarray, y_groups: np.ndarray, metric: str = "euclidean",
+) -> tuple[int, int]:
+    """Host (numpy) mirror of the device grouped-tile block schedule.
+
+    Pads the group keys exactly like ``kernels.ops.nng_tile_bits_grouped``
+    (-1 = invalid row) and delegates the block-activity decision to the
+    SAME ``ops.grouped_block_active`` rule the wrapper's counters use, so
+    there is a single source of truth for the skip schedule. Returns
+    (tiles_scheduled, tiles_skipped).
+    """
+    # lazy: keep this module importable without jax
+    from repro.kernels.ops import grouped_block_active, nng_tile_geometry
+
+    def pad(g, t):
+        g = np.asarray(g, np.int32)
+        return np.concatenate([g, np.full((-len(g)) % t, -1, np.int32)])
+
+    tq, tp = nng_tile_geometry(len(x_groups), len(y_groups), metric)
+    active = np.asarray(
+        grouped_block_active(pad(x_groups, tq), pad(y_groups, tp), tq, tp))
+    return int(active.size), int(active.size - active.sum())
 
 
 def landmark_host(

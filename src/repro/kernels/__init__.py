@@ -4,7 +4,10 @@ from .ops import (  # noqa: F401
     Metric,
     eps_count,
     get_metric,
+    grouped_block_active,
     nng_tile_bits,
+    nng_tile_bits_grouped,
+    nng_tile_geometry,
     pairwise_hamming,
     pairwise_sqdist,
 )

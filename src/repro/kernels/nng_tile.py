@@ -17,6 +17,20 @@ Two metric variants share the packing epilogue:
   - ``nng_tile_hamming_pallas``  Hamming over packed uint32 words (VPU
                                  XOR+popcount, integer threshold)
 
+Group-aware variants for the landmark engine (Algorithms 5+6):
+  - ``nng_tile_grouped_pallas`` / ``nng_tile_grouped_hamming_pallas``
+    additionally fold the Voronoi cell-id equality test, row validity
+    (group < 0 marks padding), and the self-pair exclusion (global-id
+    inequality) into the threshold — the landmark engine's Phase-3/4
+    "masked tile" never materializes a dense boolean mask in HBM.
+    Because callers cell-sort their buffers, each kernel block first
+    reduces its group tiles to [min, max] ranges and skips the whole
+    distance computation when the ranges cannot intersect (all-padding
+    or cross-cell blocks): a ``pl.when`` early-out that writes only a
+    zero bitmask word tile. The host-side schedule of which blocks are
+    live is reproduced by ``repro.kernels.ops.grouped_block_active`` so
+    wrappers can report exact tiles_scheduled / tiles_skipped counters.
+
 Per-step HBM traffic for the 1M-point sift workload (n_loc=4096):
   before: 67 MB distance tile + ≥134 MB sort traffic
   after:  2 MB points + 2 MB bits + 16 KB counts      (~50–100× less)
@@ -39,6 +53,34 @@ def _pack_words(hit):
     return jnp.sum(words * powers[None, None, :], axis=-1)
 
 
+def _l2_tile_d2(x, y):
+    """Shared L2 distance body (MXU BLAS3 expansion, fp32): (TQ, d) x
+    (TP, d) -> (TQ, TP) squared distances. ALL tile kernels (grouped and
+    ungrouped) must use this so their numerics never diverge."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    acc = jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    xs = (x * x).sum(axis=1)[:, None]
+    ys = (y * y).sum(axis=1)[None, :]
+    return xs + ys - 2.0 * acc
+
+
+def _hamming_tile_d(x, y, wchunk: int):
+    """Shared Hamming distance body: packed uint32 rows -> (TQ, TP) int32
+    counts. XOR+popcount has no MXU path; the word dim is chunked so the
+    (TQ, TP, C) cube stays VMEM-resident (w is static inside the kernel)."""
+    tq, w = x.shape
+    tp = y.shape[0]
+    d = jnp.zeros((tq, tp), jnp.int32)
+    for c0 in range(0, w, wchunk):
+        xor = jnp.bitwise_xor(
+            x[:, None, c0:c0 + wchunk], y[None, :, c0:c0 + wchunk])
+        d = d + jnp.sum(jax.lax.population_count(xor).astype(jnp.int32),
+                        axis=-1)
+    return d
+
+
 # ---------------------------------------------------------------------------
 # L2 variant
 # ---------------------------------------------------------------------------
@@ -50,14 +92,8 @@ def _nng_tile_kernel(x_ref, y_ref, yvalid_ref, cnt_ref, bits_ref, *, eps2):
     def _init():
         cnt_ref[...] = jnp.zeros_like(cnt_ref)
 
-    x = x_ref[...].astype(jnp.float32)      # (TQ, d)
-    y = y_ref[...].astype(jnp.float32)      # (TP, d)
-    acc = jax.lax.dot_general(
-        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    xs = (x * x).sum(axis=1)[:, None]
-    ys = (y * y).sum(axis=1)[None, :]
-    d2 = xs + ys - 2.0 * acc
-    hit = (d2 <= eps2) & (yvalid_ref[...] != 0)[None, :]    # (TQ, TP)
+    d2 = _l2_tile_d2(x_ref[...], y_ref[...])                # (TQ, TP)
+    hit = (d2 <= eps2) & (yvalid_ref[...] != 0)[None, :]
     cnt_ref[...] += jnp.sum(hit.astype(jnp.int32), axis=1)
     bits_ref[...] = _pack_words(hit)
 
@@ -119,18 +155,7 @@ def _nng_tile_hamming_kernel(
     def _init():
         cnt_ref[...] = jnp.zeros_like(cnt_ref)
 
-    x = x_ref[...]                          # (TQ, w) uint32
-    y = y_ref[...]                          # (TP, w) uint32
-    tq, w = x.shape
-    tp = y.shape[0]
-    # XOR+popcount has no MXU path; chunk the word dim so the (TQ, TP, C)
-    # cube stays VMEM-resident (w is static inside the kernel).
-    d = jnp.zeros((tq, tp), jnp.int32)
-    for c0 in range(0, w, wchunk):
-        xor = jnp.bitwise_xor(
-            x[:, None, c0:c0 + wchunk], y[None, :, c0:c0 + wchunk])
-        d = d + jnp.sum(jax.lax.population_count(xor).astype(jnp.int32),
-                        axis=-1)
+    d = _hamming_tile_d(x_ref[...], y_ref[...], wchunk)     # (TQ, TP)
     hit = (d <= eps) & (yvalid_ref[...] != 0)[None, :]
     cnt_ref[...] += jnp.sum(hit.astype(jnp.int32), axis=1)
     bits_ref[...] = _pack_words(hit)
@@ -176,3 +201,190 @@ def nng_tile_hamming_ref(x, y, y_valid, eps: float):
     hit = (d <= jnp.int32(int(eps))) & (y_valid != 0)[None, :]
     cnt = jnp.sum(hit.astype(jnp.int32), axis=1)
     return cnt, _pack_words(hit)
+
+
+# ---------------------------------------------------------------------------
+# Group-aware variants (landmark engine): cell equality + validity + self-
+# pair exclusion fused next to the ε-threshold, with whole-block skipping
+# over cell-sorted buffers.
+# ---------------------------------------------------------------------------
+
+_GBIG = 2**30        # "no valid group in this tile" sentinel (python int so
+                     # kernels don't capture a traced constant)
+
+
+def _group_ranges(xg, yg):
+    """Valid-group [min, max] of the two tiles + the block-activity flag.
+
+    Rows with group < 0 are padding/invalid. Tiles are cell-sorted by the
+    caller, so a block is dead iff the two valid-group ranges do not
+    intersect — which also covers all-padding tiles (empty range)."""
+    xv = xg >= 0
+    yv = yg >= 0
+    xmin = jnp.min(jnp.where(xv, xg, _GBIG))
+    xmax = jnp.max(jnp.where(xv, xg, -1))
+    ymin = jnp.min(jnp.where(yv, yg, _GBIG))
+    ymax = jnp.max(jnp.where(yv, yg, -1))
+    active = (xmin <= ymax) & (ymin <= xmax)
+    return xv, yv, active
+
+
+def _grouped_hit(d_ok, xg, yg, xv, yv, xid, yid):
+    """Fold group equality, validity, and id-inequality into the hit mask."""
+    return (
+        d_ok
+        & (xg[:, None] == yg[None, :])
+        & xv[:, None] & yv[None, :]
+        & (xid[:, None] != yid[None, :])
+    )
+
+
+def _nng_tile_grouped_kernel(
+    x_ref, y_ref, xg_ref, yg_ref, xid_ref, yid_ref, cnt_ref, bits_ref, *,
+    eps2,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    xg = xg_ref[...]
+    yg = yg_ref[...]
+    xv, yv, active = _group_ranges(xg, yg)
+
+    @pl.when(active)
+    def _compute():
+        d2 = _l2_tile_d2(x_ref[...], y_ref[...])            # (TQ, TP)
+        hit = _grouped_hit(d2 <= eps2, xg, yg, xv, yv,
+                           xid_ref[...], yid_ref[...])
+        cnt_ref[...] += jnp.sum(hit.astype(jnp.int32), axis=1)
+        bits_ref[...] = _pack_words(hit)
+
+    @pl.when(~active)
+    def _skip():
+        bits_ref[...] = jnp.zeros_like(bits_ref)
+
+
+def nng_tile_grouped_pallas(
+    x, y, x_group, y_group, x_ids, y_ids, eps: float, *, tq: int = 256,
+    tp: int = 512, interpret: bool = False,
+):
+    """Group-aware L2 tile: x (q, d), y (p, d), groups (q,)/(p,) int32 (< 0
+    = invalid row), ids (q,)/(p,) int32 global point ids ->
+    (cnt (q,), bits (q, p/32)).
+
+    hit(i, j) = d2 <= eps² and x_group[i] == y_group[j] >= 0 and
+    x_ids[i] != y_ids[j]. Same tiling contract as ``nng_tile_pallas``.
+    Blocks whose valid-group ranges cannot intersect early-out without
+    touching the MXU (callers should cell-sort rows so this fires)."""
+    q, d = x.shape
+    p, _ = y.shape
+    assert q % tq == 0 and p % tp == 0 and tp % 32 == 0
+    grid = (q // tq, p // tp)
+    kernel = functools.partial(_nng_tile_grouped_kernel, eps2=float(eps) ** 2)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tp, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+            pl.BlockSpec((tp,), lambda i, j: (j,)),
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+            pl.BlockSpec((tp,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+            pl.BlockSpec((tq, tp // 32), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+            jax.ShapeDtypeStruct((q, p // 32), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(x, y, x_group, y_group, x_ids, y_ids)
+
+
+def nng_tile_grouped_ref(x, y, x_group, y_group, x_ids, y_ids, eps: float):
+    """Pure-jnp oracle for the grouped L2 tile (same BLAS3 fp32 expansion)."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    d2 = (jnp.sum(x * x, 1)[:, None] + jnp.sum(y * y, 1)[None, :]
+          - 2.0 * x @ y.T)
+    hit = _grouped_hit(d2 <= jnp.float32(eps) ** 2, x_group, y_group,
+                       x_group >= 0, y_group >= 0, x_ids, y_ids)
+    return jnp.sum(hit.astype(jnp.int32), axis=1), _pack_words(hit)
+
+
+def _nng_tile_grouped_hamming_kernel(
+    x_ref, y_ref, xg_ref, yg_ref, xid_ref, yid_ref, cnt_ref, bits_ref, *,
+    eps: int, wchunk: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    xg = xg_ref[...]
+    yg = yg_ref[...]
+    xv, yv, active = _group_ranges(xg, yg)
+
+    @pl.when(active)
+    def _compute():
+        d = _hamming_tile_d(x_ref[...], y_ref[...], wchunk)  # (TQ, TP)
+        hit = _grouped_hit(d <= eps, xg, yg, xv, yv,
+                           xid_ref[...], yid_ref[...])
+        cnt_ref[...] += jnp.sum(hit.astype(jnp.int32), axis=1)
+        bits_ref[...] = _pack_words(hit)
+
+    @pl.when(~active)
+    def _skip():
+        bits_ref[...] = jnp.zeros_like(bits_ref)
+
+
+def nng_tile_grouped_hamming_pallas(
+    x, y, x_group, y_group, x_ids, y_ids, eps: float, *, tq: int = 128,
+    tp: int = 256, wchunk: int = 8, interpret: bool = False,
+):
+    """Group-aware Hamming tile over packed uint32 rows; same contract as
+    ``nng_tile_grouped_pallas`` with exact integer threshold."""
+    q, w = x.shape
+    p, _ = y.shape
+    assert q % tq == 0 and p % tp == 0 and tp % 32 == 0 and w % wchunk == 0
+    grid = (q // tq, p // tp)
+    kernel = functools.partial(
+        _nng_tile_grouped_hamming_kernel, eps=int(eps), wchunk=wchunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((tp, w), lambda i, j: (j, 0)),
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+            pl.BlockSpec((tp,), lambda i, j: (j,)),
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+            pl.BlockSpec((tp,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+            pl.BlockSpec((tq, tp // 32), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+            jax.ShapeDtypeStruct((q, p // 32), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(x, y, x_group, y_group, x_ids, y_ids)
+
+
+def nng_tile_grouped_hamming_ref(
+    x, y, x_group, y_group, x_ids, y_ids, eps: float
+):
+    """Pure-jnp oracle for the grouped Hamming tile."""
+    xor = jnp.bitwise_xor(x[:, None, :], y[None, :, :])
+    d = jnp.sum(jax.lax.population_count(xor).astype(jnp.int32), axis=-1)
+    hit = _grouped_hit(d <= jnp.int32(int(eps)), x_group, y_group,
+                       x_group >= 0, y_group >= 0, x_ids, y_ids)
+    return jnp.sum(hit.astype(jnp.int32), axis=1), _pack_words(hit)

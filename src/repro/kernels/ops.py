@@ -21,8 +21,10 @@ import numpy as np
 
 from . import ref
 from .eps_count import eps_count_pallas
-from .nng_tile import (nng_tile_hamming_pallas, nng_tile_hamming_ref,
-                       nng_tile_pallas, nng_tile_ref)
+from .nng_tile import (_GBIG, nng_tile_grouped_hamming_pallas,
+                       nng_tile_grouped_hamming_ref, nng_tile_grouped_pallas,
+                       nng_tile_grouped_ref, nng_tile_hamming_pallas,
+                       nng_tile_hamming_ref, nng_tile_pallas, nng_tile_ref)
 from .pairwise_hamming import pairwise_hamming_pallas
 from .pairwise_l2 import pairwise_sqdist_pallas
 
@@ -34,6 +36,13 @@ def _mode() -> str:
     if env in ("interpret", "jnp", "compiled"):
         return env
     return "compiled" if jax.default_backend() == "tpu" else "jnp"
+
+
+def pallas_mode() -> str:
+    """The resolved kernel execution mode ("compiled" | "interpret" |
+    "jnp") — public accessor for consumers that must key on it (the device
+    engine's program memoization, benchmark provenance)."""
+    return _mode()
 
 
 def _pad_rows(a: jnp.ndarray, mult: int, value=0):
@@ -148,8 +157,7 @@ def nng_tile_bits(x, y, y_valid, eps: float, metric: str = "euclidean"):
             yvp, _ = _pad_rows(yv, 32)
             cnt, bits = nng_tile_ref(x, yp, yvp, eps)
             return cnt, bits[:, :nw]
-        tq = 256 if q >= 256 else _round_up(q, 8)
-        tp = 512 if p >= 512 else _round_up(p, 128)
+        tq, tp = nng_tile_geometry(q, p, metric)
         xp, _ = _pad_rows(x, tq)
         yp, _ = _pad_rows(y, tp)
         yvp, _ = _pad_rows(yv, tp)
@@ -166,8 +174,7 @@ def nng_tile_bits(x, y, y_valid, eps: float, metric: str = "euclidean"):
             yvp, _ = _pad_rows(yv, 32)
             cnt, bits = nng_tile_hamming_ref(x, yp, yvp, eps)
             return cnt, bits[:, :nw]
-        tq = 128 if q >= 128 else _round_up(q, 8)
-        tp = 256 if p >= 256 else _round_up(p, 128)
+        tq, tp = nng_tile_geometry(q, p, metric)
         xp, _ = _pad_rows(x, tq)
         yp, _ = _pad_rows(y, tp)
         yvp, _ = _pad_rows(yv, tp)
@@ -177,6 +184,106 @@ def nng_tile_bits(x, y, y_valid, eps: float, metric: str = "euclidean"):
             xp, yp, yvp, float(eps), tq, tp, mode == "interpret")
         return cnt[:q], bits[:q, :nw]
     raise ValueError(metric)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "tq", "tp", "interpret"))
+def _nng_tile_grp_l2_padded(x, y, xg, yg, xid, yid, eps, tq, tp, interpret):
+    return nng_tile_grouped_pallas(
+        x, y, xg, yg, xid, yid, eps, tq=tq, tp=tp, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "tq", "tp", "interpret"))
+def _nng_tile_grp_ham_padded(x, y, xg, yg, xid, yid, eps, tq, tp, interpret):
+    return nng_tile_grouped_hamming_pallas(
+        x, y, xg, yg, xid, yid, eps, tq=tq, tp=tp, interpret=interpret)
+
+
+def grouped_block_active(x_group, y_group, tq: int, tp: int):
+    """Host-side mirror of the grouped kernel's block-skip rule.
+
+    Reduces the (tile-padded) group arrays to per-tile valid-group
+    [min, max] ranges and marks a (tq × tp) block live iff the ranges
+    intersect. This is exactly the decision ``_group_ranges`` makes inside
+    the Pallas kernel, so the (nqb, npb) bool map it returns is the ground
+    truth for the tiles_scheduled / tiles_skipped counters (and for
+    host-vs-device schedule parity tests)."""
+    q = x_group.shape[0]
+    p = y_group.shape[0]
+    assert q % tq == 0 and p % tp == 0, (q, tq, p, tp)
+    xg = x_group.reshape(q // tq, tq)
+    yg = y_group.reshape(p // tp, tp)
+    xmin = jnp.min(jnp.where(xg >= 0, xg, _GBIG), axis=1)
+    xmax = jnp.max(jnp.where(xg >= 0, xg, -1), axis=1)
+    ymin = jnp.min(jnp.where(yg >= 0, yg, _GBIG), axis=1)
+    ymax = jnp.max(jnp.where(yg >= 0, yg, -1), axis=1)
+    return ((xmin[:, None] <= ymax[None, :])
+            & (ymin[None, :] <= xmax[:, None]))
+
+
+def nng_tile_geometry(q: int, p: int, metric: str) -> tuple[int, int]:
+    """The (tq, tp) block shape the fused tile wrappers (``nng_tile_bits``
+    and ``nng_tile_bits_grouped``) use for given operand row counts — the
+    single source of truth for tile tuning, exposed so callers can
+    reproduce the grouped tile-block accounting (benchmarks, parity
+    tests)."""
+    if metric == "euclidean":
+        tq = 256 if q >= 256 else _round_up(q, 8)
+        tp = 512 if p >= 512 else _round_up(p, 128)
+    elif metric == "hamming":
+        tq = 128 if q >= 128 else _round_up(q, 8)
+        tp = 256 if p >= 256 else _round_up(p, 128)
+    else:
+        raise ValueError(metric)
+    return tq, tp
+
+
+def nng_tile_bits_grouped(
+    x, y, x_group, y_group, x_ids, y_ids, eps: float,
+    metric: str = "euclidean",
+):
+    """Group-aware fused ε-NNG tile for the landmark engine.
+
+    hit(i, j) = d(x_i, y_j) <= eps  and  x_group[i] == y_group[j]  and both
+    groups >= 0 (negative group = padding/invalid row) and
+    x_ids[i] != y_ids[j] (structural self-pair exclusion, robust to fp32
+    d(x, x) rounding past eps).
+
+    Returns (cnt (q,), bits (q, ceil(p/32)) uint32, tiles_scheduled,
+    tiles_skipped): exact per-row counts, the packed little-endian hit
+    mask, and int32 scalar counters for the kernel's whole-block skip of
+    all-padding / cross-cell (tq × tp) blocks. Callers should cell-sort
+    rows so group ranges per tile are tight and the skip actually fires;
+    skipping is conservative (a block is only skipped when NO same-group
+    pair can exist in it), so results never depend on the row order.
+    Pads to tile multiples internally (pad rows get group -1)."""
+    mode = _mode()
+    q = x.shape[0]
+    p = y.shape[0]
+    nw = -(-p // 32)
+    tq, tp = nng_tile_geometry(q, p, metric)
+    dtype = jnp.float32 if metric == "euclidean" else jnp.uint32
+    xp, _ = _pad_rows(jnp.asarray(x, dtype), tq)
+    yp, _ = _pad_rows(jnp.asarray(y, dtype), tp)
+    xgp, _ = _pad_rows(jnp.asarray(x_group, jnp.int32), tq, value=-1)
+    ygp, _ = _pad_rows(jnp.asarray(y_group, jnp.int32), tp, value=-1)
+    xidp, _ = _pad_rows(jnp.asarray(x_ids, jnp.int32), tq, value=-1)
+    yidp, _ = _pad_rows(jnp.asarray(y_ids, jnp.int32), tp, value=-1)
+    active = grouped_block_active(xgp, ygp, tq, tp)
+    scheduled = jnp.int32(active.size)
+    skipped = scheduled - jnp.sum(active.astype(jnp.int32))
+    if mode == "jnp":
+        reff = (nng_tile_grouped_ref if metric == "euclidean"
+                else nng_tile_grouped_hamming_ref)
+        cnt, bits = reff(xp, yp, xgp, ygp, xidp, yidp, eps)
+    else:
+        cmul = 128 if metric == "euclidean" else 8
+        xp = _pad_cols(xp, cmul)
+        yp = _pad_cols(yp, cmul)
+        fn = (_nng_tile_grp_l2_padded if metric == "euclidean"
+              else _nng_tile_grp_ham_padded)
+        cnt, bits = fn(xp, yp, xgp, ygp, xidp, yidp, float(eps), tq, tp,
+                       mode == "interpret")
+    return cnt[:q], bits[:q, :nw], scheduled, skipped
 
 
 @jax.jit

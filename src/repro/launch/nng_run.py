@@ -53,14 +53,16 @@ def grow_plan(plan):
 def run_landmark(pts, eps, centers, f, mesh, plan, *, metric="euclidean",
                  max_grows=6):
     """Landmark engine + re-plan loop: on overflow, double all plan
-    capacities and re-run. Returns (outputs, plan) with the combined
-    overflow flag guaranteed False."""
+    capacities and re-run. Returns (outputs, plan) with the overflow flag
+    (outputs[6]) guaranteed False; outputs[7] / outputs[8] are the
+    per-rank tiles_skipped / tiles_scheduled counters of the grouped-tile
+    fast path (from the final, non-overflowing run)."""
     from repro.core.distributed import landmark_nng
     for _ in range(max_grows):
         out = landmark_nng(
             jnp.asarray(pts), float(eps), jnp.asarray(centers),
             jnp.asarray(f, np.int32), mesh, plan, metric=metric)
-        if not bool(np.asarray(out[-1]).any()):
+        if not bool(np.asarray(out[6]).any()):
             return out, plan
         plan = grow_plan(plan)
     raise RuntimeError(f"landmark overflow persists at plan={plan}")
@@ -144,7 +146,7 @@ def main(argv=None):
             cap_ghost=int(gcnt.max()) + 8,
             g_per_pt=max(g_per_pt, 1),
             k_cap=args.k_cap)
-        (Wids, wn, wc, Gids, gn, gc, ovf), plan = run_landmark(
+        (Wids, wn, wc, Gids, gn, gc, ovf, tskip, tsched), plan = run_landmark(
             pts, args.eps, cpts, f, mesh, plan, metric=args.metric)
         jax.block_until_ready(wc)
         elapsed = time.time() - t0
@@ -152,6 +154,9 @@ def main(argv=None):
         s2, d2 = edges_from_neighbor_lists(Gids, gn)
         src, dst = np.concatenate([s1, s2]), np.concatenate([d1, d2])
         overflow = False
+        nskip = int(np.asarray(tskip).sum())
+        nsched = int(np.asarray(tsched).sum())
+        print(f"grouped tiles skipped={nskip}/{nsched} (plan={plan})")
 
     from repro.core.graph import EpsGraph
     g = EpsGraph(n, src, dst)

@@ -66,6 +66,27 @@ def test_external_queries():
     assert got == want
 
 
+@pytest.mark.parametrize("seed,leaf", [(0, 1), (0, 10), (3, 4), (7, 2)])
+def test_scaled_collinear_regression(seed, leaf):
+    """Scale-relative expand-slack regression: collinear float32 points at
+    distance scale ~1e8 put every ancestor of a boundary neighbor at an
+    exactly tight triangle-inequality knife edge, where float64 sqrt
+    rounding (~1e-8 absolute) exceeded the old absolute 1e-9 slack and
+    silently dropped exact neighbors. Ground truth is the integer line
+    geometry: p_i = m_i * 2^17 * (1, 1), d(i, j) = sqrt(2) * 2^17 * |dm|."""
+    S = float(2**17)
+    M = 80
+    rng = np.random.default_rng(seed)
+    ms = np.sort(rng.choice(400, size=200, replace=False))
+    pts = (ms[:, None] * S * np.ones((1, 2))).astype(np.float32)
+    eps = float(np.sqrt(2.0 * (M * S) ** 2))
+    want = int((np.abs(ms[:, None] - ms[None, :]) <= M).sum() - len(ms))
+    t = build_covertree(pts, "euclidean", leaf_size=leaf)
+    qi, pj = t.query(pts, eps)
+    got = int((qi != pj).sum())
+    assert got == want, f"dropped {want - got} collinear boundary neighbors"
+
+
 @settings(max_examples=25, deadline=None)
 @given(
     n=st.integers(5, 120),

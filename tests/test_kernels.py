@@ -194,6 +194,117 @@ def test_nng_tile_interpret_matches_wrapper_jnp():
     assert (np.asarray(bi) == np.asarray(bj)).all()
 
 
+def _grouped_oracle(metric, x, y, xg, yg, xid, yid, eps):
+    if metric == "euclidean":
+        d = ((x.astype(np.float64)[:, None, :]
+              - y.astype(np.float64)[None, :, :]) ** 2).sum(-1)
+        ok = d <= eps ** 2
+    else:
+        ok = np.bitwise_count(x[:, None, :] ^ y[None, :, :]).sum(-1) <= eps
+    return (ok & (xg[:, None] == yg[None, :]) & (xg[:, None] >= 0)
+            & (yg[None, :] >= 0) & (xid[:, None] != yid[None, :]))
+
+
+@pytest.mark.parametrize("metric,q,p,d,eps", [
+    ("euclidean", 256, 512, 16, 2.0), ("euclidean", 70, 130, 6, 2.0),
+    ("euclidean", 300, 515, 40, 3.0), ("hamming", 128, 256, 8, 70),
+    ("hamming", 100, 190, 5, 60),
+])
+def test_nng_tile_grouped_fused(metric, q, p, d, eps):
+    """Grouped kernel (interpret) + jnp fallback vs a float64/exact oracle:
+    group equality, validity (< 0), and id-inequality are all folded in."""
+    from repro.kernels import nng_tile_bits_grouped
+    if metric == "euclidean":
+        x = RNG.normal(size=(q, d)).astype(np.float32)
+        y = RNG.normal(size=(p, d)).astype(np.float32)
+    else:
+        x = RNG.integers(0, 2**32, size=(q, d), dtype=np.uint32)
+        y = RNG.integers(0, 2**32, size=(p, d), dtype=np.uint32)
+    xg = RNG.integers(-1, 6, size=q).astype(np.int32)
+    yg = RNG.integers(-1, 6, size=p).astype(np.int32)
+    xid = np.arange(q, dtype=np.int32)
+    yid = np.arange(37, 37 + p, dtype=np.int32)
+    xid[:4] = yid[:4]  # some shared ids -> self-pair exclusion must fire
+    want = _grouped_oracle(metric, x, y, xg, yg, xid, yid, eps)
+    for mode in ("interpret", "jnp"):
+        os.environ["REPRO_PALLAS"] = mode
+        try:
+            cnt, bits, sched, skip = nng_tile_bits_grouped(
+                x, y, xg, yg, xid, yid, eps, metric=metric)
+        finally:
+            os.environ["REPRO_PALLAS"] = "interpret"
+        hits = np.unpackbits(np.asarray(bits).view(np.uint8), axis=1,
+                             bitorder="little")[:, :p]
+        assert (hits.astype(bool) == want).all(), mode
+        assert (np.asarray(cnt) == want.sum(1)).all(), mode
+        # cnt/popcount identity on the packed words
+        assert (np.asarray(cnt)
+                == np.bitwise_count(np.asarray(bits)).sum(axis=1)).all()
+        assert int(sched) >= 1 and 0 <= int(skip) <= int(sched)
+
+
+@pytest.mark.parametrize("metric", ["euclidean", "hamming"])
+def test_nng_tile_grouped_block_skip(metric):
+    """Cell-sorted inputs: whole-block skipping must fire, never change the
+    result, and its counters must match the host-side schedule mirror."""
+    from repro.core.host_algos import grouped_tile_schedule
+    from repro.kernels import nng_tile_bits_grouped
+    q, p = 600, 1200
+    xg = np.sort(RNG.integers(0, 50, size=q)).astype(np.int32)
+    yg = np.sort(RNG.integers(0, 50, size=p)).astype(np.int32)
+    xg[q - 40:] = -1   # trailing padding rows (as after _cell_sort)
+    yg[p - 70:] = -1
+    if metric == "euclidean":
+        x = RNG.normal(size=(q, 5)).astype(np.float32)
+        y = RNG.normal(size=(p, 5)).astype(np.float32)
+        eps = 2.0
+    else:
+        x = RNG.integers(0, 2**32, size=(q, 5), dtype=np.uint32)
+        y = RNG.integers(0, 2**32, size=(p, 5), dtype=np.uint32)
+        eps = 70
+    xid = np.arange(q, dtype=np.int32)
+    yid = np.arange(q, q + p, dtype=np.int32)
+    want = _grouped_oracle(metric, x, y, xg, yg, xid, yid, eps)
+    cnt, bits, sched, skip = nng_tile_bits_grouped(
+        x, y, xg, yg, xid, yid, eps, metric=metric)
+    hits = np.unpackbits(np.asarray(bits).view(np.uint8), axis=1,
+                         bitorder="little")[:, :p]
+    assert (hits.astype(bool) == want).all()
+    assert int(skip) > 0, "sorted cells must skip cross-cell blocks"
+    assert (int(sched), int(skip)) == grouped_tile_schedule(xg, yg, metric)
+    # shuffled (un-sorted) rows: skipping may stop firing but the hit set
+    # must be identical modulo the permutation (skip is conservative)
+    perm = RNG.permutation(q)
+    cnt2, _, _, _ = nng_tile_bits_grouped(
+        x[perm], y, xg[perm], yg, xid[perm], yid, eps, metric=metric)
+    assert (np.asarray(cnt2) == np.asarray(cnt)[perm]).all()
+
+
+def test_bits_to_gathered_ids():
+    """Landmark-path extraction: bitmask + arbitrary per-column id table ->
+    sorted hit ids, SENTINEL-padded, vs a direct nonzero() reference."""
+    import jax.numpy as jnp
+    from repro.core.distributed.device import SENTINEL, _bits_to_gathered_ids
+    m, p = 40, 256
+    mask = RNG.random((m, p)) < 0.05
+    mask[7] = False
+    words = np.zeros((m, p // 32), np.uint32)
+    for c in range(p):
+        words[:, c // 32] |= (mask[:, c].astype(np.uint32)
+                              << np.uint32(c % 32))
+    ids_row = RNG.permutation(10_000)[:p].astype(np.int32)  # scattered ids
+    for k in (1, 4, 64, 300):
+        got = np.asarray(_bits_to_gathered_ids(
+            jnp.asarray(words), jnp.asarray(ids_row), k))
+        for i in range(m):
+            # truncation keeps the k LOWEST COLUMNS (exact when the row's
+            # popcount <= k, which overflow detection guarantees), then
+            # sorts the gathered ids
+            want = np.sort(ids_row[np.flatnonzero(mask[i])[:k]])
+            assert (got[i, :len(want)] == want).all(), (i, k)
+            assert (got[i, len(want):] == int(SENTINEL)).all(), (i, k)
+
+
 def test_bits_to_ids_extraction():
     """Device-engine bitmask -> sorted-id extraction against a direct
     nonzero() reference, across k regimes (k < words, k > columns)."""
