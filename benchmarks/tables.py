@@ -3,10 +3,21 @@
 All output rows: ``name,us_per_call,derived`` CSV (plus a human column).
 Datasets are synthetic stand-ins matched to Table I characteristics
 (offline container; loaders pick up real files if present).
+
+Also a CLI: ``python benchmarks/tables.py --check NEW.json --prev PREV.json``
+compares a fresh ``BENCH_landmark.json`` against the previous CI run's
+artifact and fails on a >2× regression in edges/s or the tile/node skip
+rates (degrades to a warning when no history exists).
 """
 from __future__ import annotations
 
+import os
+import sys
 import time
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+if __name__ == "__main__":   # runnable without PYTHONPATH, like run.py
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 import numpy as np
 
@@ -178,16 +189,18 @@ def bench_block_pruning():
 # -- landmark device engine: perf trajectory (machine-readable) -------------
 def bench_landmark_device(json_path: str = "BENCH_landmark.json"):
     """Landmark DEVICE engine on the available mesh: edges/s, all_to_all
-    comm bytes, grouped-tile skip rate, and the before/after per-tile HBM
-    byte accounting (pre-PR dense fp32 tile + bool mask vs packed bitmask
-    words + counts). Emits ``BENCH_landmark.json`` so the perf trajectory
-    is tracked by CI."""
+    comm bytes, grouped-tile skip rate, the before/after per-tile HBM byte
+    accounting (pre-PR dense fp32 tile + bool mask vs packed bitmask words
+    + counts), and BOTH traversal flavors' work counters (grouped tiles vs
+    device cover-tree traversal — the tree path must evaluate strictly
+    fewer pair distances on this clustered workload). Emits
+    ``BENCH_landmark.json`` so the perf trajectory is tracked by CI."""
     import json
 
     import jax
     import numpy as _np
 
-    from repro.core.distributed import make_nng_mesh, plan_landmark
+    from repro.core.distributed import make_nng_mesh, plan_landmark_device
     from repro.core.graph import EpsGraph
     from repro.core.landmark import lpt_assignment, select_centers
     from repro.core.metrics_host import get_host_metric
@@ -204,27 +217,51 @@ def bench_landmark_device(json_path: str = "BENCH_landmark.json"):
     pts = pts[:n]
     met = get_host_metric("euclidean")
     rng = _np.random.default_rng(0)
-    plan = plan_landmark(n, nranks)
-    cidx = select_centers(n, plan.m_centers, rng)
+    m_centers = max(2 * nranks, 32)
+    cidx = select_centers(n, m_centers, rng)
     cpts = pts[cidx]
     cell = _np.argmin(met.cdist(pts, cpts), axis=1)
-    f = lpt_assignment(_np.bincount(cell, minlength=plan.m_centers), nranks)
+    f = lpt_assignment(_np.bincount(cell, minlength=m_centers), nranks)
     mesh = make_nng_mesh()
+    # ONE device counting pass replaces the heuristic + grow loop: exact
+    # coalesce/ghost capacities, so the common case never re-plans
+    plan = plan_landmark_device(pts, cpts, _np.asarray(f, _np.int32),
+                                float(eps), mesh, k_cap=128)
 
-    # warm-up pass: absorbs jit/shard_map compile AND settles the plan via
-    # the overflow grow loop, so the timed run below measures steady-state
-    # engine throughput (the number CI's trend check will gate on)
-    out, plan = run_landmark(pts, eps, cpts, f, mesh, plan, max_grows=10)
-    jax.block_until_ready(out[2])
-    t0 = time.perf_counter()
-    out, plan = run_landmark(pts, eps, cpts, f, mesh, plan, max_grows=10)
-    jax.block_until_ready(out[2])
-    dt = time.perf_counter() - t0
+    def timed(traversal):
+        forest = None
+        if traversal == "tree":
+            from repro.core.flat_tree import (build_cell_forests,
+                                              stack_device_forests)
+            forest = stack_device_forests(
+                build_cell_forests(pts, cell, f, nranks))
+        # warm-up pass absorbs jit/shard_map compile (and, for k_cap, any
+        # residual overflow grow), so the timed run measures steady-state
+        # engine throughput (the number CI's trend check gates on)
+        out, p = run_landmark(pts, eps, cpts, f, mesh, plan, max_grows=10,
+                              traversal=traversal, forest=forest, cell=cell)
+        jax.block_until_ready(out[2])
+        t0 = time.perf_counter()
+        out, p = run_landmark(pts, eps, cpts, f, mesh, p, max_grows=10,
+                              traversal=traversal, forest=forest, cell=cell)
+        jax.block_until_ready(out[2])
+        return out, p, time.perf_counter() - t0
+
+    out, plan, dt = timed("tiles")
+    out_tree, _, dt_tree = timed("tree")
     s1, d1 = edges_from_neighbor_lists(out[0], out[1])
     s2, d2 = edges_from_neighbor_lists(out[3], out[4])
     g = EpsGraph(n, _np.concatenate([s1, s2]), _np.concatenate([d1, d2]))
+    st1, dt1 = edges_from_neighbor_lists(out_tree[0], out_tree[1])
+    st2, dt2 = edges_from_neighbor_lists(out_tree[3], out_tree[4])
+    g_tree = EpsGraph(n, _np.concatenate([st1, st2]),
+                      _np.concatenate([dt1, dt2]))
+    assert g_tree == g, "tree vs tiles traversal edge mismatch"
     skipped = int(_np.asarray(out[7]).sum())
     scheduled = int(_np.asarray(out[8]).sum())
+    dists_tiles = int(_np.asarray(out[9]).sum())
+    dists_tree = int(_np.asarray(out_tree[9]).sum())
+    nodes_pruned = int(_np.asarray(out_tree[10]).sum())
 
     # per-rank coalesce/ghost buffer row counts + payload bytes (pts+id+cell)
     lw = nranks * plan.cap_coal
@@ -258,6 +295,18 @@ def bench_landmark_device(json_path: str = "BENCH_landmark.json"):
         "comm_bytes": comm,
         "tiles": {"scheduled": scheduled, "skipped": skipped,
                   "skip_rate": round(skipped / max(scheduled, 1), 4)},
+        # work counters of the two traversal flavors: the device cover-tree
+        # path must evaluate strictly fewer pair distances than the grouped
+        # dense tiles on this clustered workload (in-cell pruning)
+        "traversal": {
+            "tiles": {"elapsed_s": round(dt, 4),
+                      "dists_evaluated": dists_tiles},
+            "tree": {"elapsed_s": round(dt_tree, 4),
+                     "dists_evaluated": dists_tree,
+                     "nodes_pruned": nodes_pruned,
+                     "dist_reduction_x": round(
+                         dists_tiles / max(dists_tree, 1), 2)},
+        },
         "tile_bytes_per_rank": tile_bytes,
         "plan": {k: getattr(plan, k) for k in
                  ("m_centers", "cap_coal", "cap_ghost", "g_per_pt", "k_cap")},
@@ -267,8 +316,81 @@ def bench_landmark_device(json_path: str = "BENCH_landmark.json"):
     emit(f"landmark-device/ranks={nranks}", dt * 1e6,
          f"edges_per_s={res['edges_per_s']};skip_rate="
          f"{res['tiles']['skip_rate']};tile_bytes_reduction="
-         f"{tile_bytes['reduction_x']}x;json={json_path}")
+         f"{tile_bytes['reduction_x']}x;tree_dist_reduction="
+         f"{res['traversal']['tree']['dist_reduction_x']}x;json={json_path}")
     return res
+
+
+# -- CI bench trend check ---------------------------------------------------
+
+# (json path, higher-is-better) metrics gated by the trend check
+TREND_METRICS = (
+    ("edges_per_s", True),
+    ("tiles.skip_rate", True),
+    ("traversal.tree.dist_reduction_x", True),
+)
+
+
+def _json_get(d, path):
+    for key in path.split("."):
+        if not isinstance(d, dict) or key not in d:
+            return None
+        d = d[key]
+    return d
+
+
+def trend_check(new: dict, prev: dict, max_ratio: float = 2.0) -> list[str]:
+    """Compare a fresh BENCH_landmark.json against the previous run's.
+
+    Returns a list of failure strings — a metric regressed when it dropped
+    to less than 1/max_ratio of the previous value (all gated metrics are
+    higher-is-better). Metrics missing on either side are skipped (schema
+    evolution must not fail CI)."""
+    failures = []
+    for path, _higher in TREND_METRICS:
+        old_v = _json_get(prev, path)
+        new_v = _json_get(new, path)
+        if old_v is None or new_v is None:
+            continue
+        if old_v > 0 and new_v * max_ratio < old_v:
+            failures.append(
+                f"{path}: {new_v} vs previous {old_v} "
+                f"(> {max_ratio}x regression)")
+    return failures
+
+
+def _check_main(argv):
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", required=True,
+                    help="fresh BENCH_landmark.json to gate")
+    ap.add_argument("--prev", default=None,
+                    help="previous run's JSON (artifact); missing => warn")
+    ap.add_argument("--max-regression", type=float, default=2.0)
+    args = ap.parse_args(argv)
+    with open(args.check) as fh:
+        new = json.load(fh)
+    if not args.prev or not os.path.exists(args.prev):
+        print(f"trend-check: no previous bench history at {args.prev!r} — "
+              "skipping (first run or artifact expired)")
+        return 0
+    with open(args.prev) as fh:
+        prev = json.load(fh)
+    failures = trend_check(new, prev, args.max_regression)
+    for path, _ in TREND_METRICS:
+        print(f"trend-check: {path}: prev={_json_get(prev, path)} "
+              f"new={_json_get(new, path)}")
+    if failures:
+        print("trend-check FAILED:\n  " + "\n  ".join(failures))
+        return 1
+    print("trend-check OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(_check_main(sys.argv[1:]))
 
 
 # -- kernel microbench (CPU jnp path; TPU path is the Pallas kernel) --------

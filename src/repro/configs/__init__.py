@@ -1,21 +1,7 @@
-"""Architecture registry: importing this package registers all configs."""
-from . import (  # noqa: F401
-    glm4_9b,
-    granite_8b,
-    qwen2_7b,
-    mistral_nemo_12b,
-    granite_moe_3b_a800m,
-    grok_1_314b,
-    zamba2_1p2b,
-    internvl2_26b,
-    xlstm_1p3b,
-    musicgen_large,
-    paper_nng,
-)
+"""Workload configs for the paper's ε-NNG system (``paper_nng``).
 
-SHAPES = {
-    "train_4k":    dict(seq_len=4096,   global_batch=256, kind="train"),
-    "prefill_32k": dict(seq_len=32768,  global_batch=32,  kind="prefill"),
-    "decode_32k":  dict(seq_len=32768,  global_batch=128, kind="decode"),
-    "long_500k":   dict(seq_len=524288, global_batch=1,   kind="decode"),
-}
+The seed repo's multi-LLM architecture registry (glm4/grok/granite/qwen2/…
+stubs and the ``SHAPES`` dry-run grid) was removed in PR 4 — this package
+now holds only the paper's own workloads.
+"""
+from . import paper_nng  # noqa: F401

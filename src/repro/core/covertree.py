@@ -125,62 +125,33 @@ class CoverTree:
     def children(self, v: int) -> np.ndarray:
         return self.child_list[self.child_start[v] : self.child_start[v + 1]]
 
+    # -- levelized view -----------------------------------------------------
+    def flat(self):
+        """The levelized structure-of-arrays view (``FlatCoverTree``) —
+        built lazily once; the tree is immutable after ``_freeze``."""
+        if getattr(self, "_flat", None) is None:
+            from .flat_tree import flatten_covertree
+            self._flat = flatten_covertree(self)
+        return self._flat
+
     # -- batch query (Alg. 3, level-synchronous) ---------------------------
-    def query(self, queries: np.ndarray, eps: float) -> tuple[np.ndarray, np.ndarray]:
+    def query(
+        self, queries: np.ndarray, eps: float, stats=None,
+    ) -> tuple[np.ndarray, np.ndarray]:
         """Find all tree points within ``eps`` of each query.
 
-        Returns (q_idx, p_idx) arrays: point ``p_idx[k]`` is an ε-neighbor of
-        ``queries[q_idx[k]]``.
+        Thin wrapper over the levelized traversal (``FlatCoverTree.
+        query_host``): same float64 distances, full-inclusion leaf-range
+        emission, and scale-relative expand slack as always — the flat
+        tables are just the array layout both the host and the device
+        traversals now share. Returns (q_idx, p_idx) arrays: point
+        ``p_idx[k]`` is an ε-neighbor of ``queries[q_idx[k]]``. Pass a
+        ``TraversalStats`` as ``stats`` to collect dists_evaluated /
+        nodes_pruned counters.
         """
-        met = self.metric
-        nq = len(queries)
-        if nq == 0 or self.num_nodes == 0:
+        if len(queries) == 0 or self.num_nodes == 0:
             return np.zeros(0, np.int64), np.zeros(0, np.int64)
-        q_hits: list[np.ndarray] = []
-        p_hits: list[np.ndarray] = []
-        fq = np.arange(nq, dtype=np.int64)        # frontier query idx
-        fv = np.zeros(nq, dtype=np.int64)         # frontier vertex idx (root)
-        while len(fq):
-            d = met.true(met.rowwise(queries[fq], self.points[self.node_pt[fv]]))
-            # full inclusion: every descendant leaf of v is within eps of q —
-            # emit the node's DFS leaf range without touching the subtree
-            incl = d + self.node_radius[fv] <= eps
-            if incl.any():
-                lo = self.leaf_lo[fv[incl]]
-                cnt = self.leaf_hi[fv[incl]] - lo
-                q_hits.append(np.repeat(fq[incl], cnt))
-                total = int(cnt.sum())
-                offs = np.arange(total) - np.repeat(
-                    np.concatenate(([0], np.cumsum(cnt)[:-1])), cnt
-                )
-                p_hits.append(self.leaf_pts[np.repeat(lo, cnt) + offs])
-            leaf = self.is_leaf[fv]
-            hit = leaf & (~incl) & (d <= eps)
-            if hit.any():
-                q_hits.append(fq[hit])
-                p_hits.append(self.node_pt[fv[hit]])
-            # triangle-inequality prune with SCALE-RELATIVE fp slack: d and
-            # the stored radii are float64 sqrt values whose rounding is
-            # ~1e-16 relative — an absolute 1e-9 is exceeded once distances
-            # reach ~1e7 and knife-edge (collinear) geometry then silently
-            # drops exact neighbors. Over-expansion is always safe.
-            bound = self.node_radius[fv] + eps
-            expand = (~leaf) & (~incl) & (d <= bound + 1e-9 + 1e-12 * (d + bound))
-            ev, eq = fv[expand], fq[expand]
-            counts = (self.child_start[ev + 1] - self.child_start[ev]).astype(np.int64)
-            fq = np.repeat(eq, counts)
-            # gather child lists: offsets within each parent's CSR slice
-            total = int(counts.sum())
-            if total == 0:
-                break
-            starts = np.repeat(self.child_start[ev], counts)
-            offs = np.arange(total) - np.repeat(
-                np.concatenate(([0], np.cumsum(counts)[:-1])), counts
-            )
-            fv = self.child_list[starts + offs]
-        if not q_hits:
-            return np.zeros(0, np.int64), np.zeros(0, np.int64)
-        return np.concatenate(q_hits), np.concatenate(p_hits)
+        return self.flat().query_host(queries, eps, stats=stats)
 
 
 def build_covertree(

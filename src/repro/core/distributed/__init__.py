@@ -1,7 +1,10 @@
 from .device import (  # noqa: F401
+    DeviceForest,
     LandmarkPlan,
     landmark_nng,
     make_nng_mesh,
     plan_landmark,
+    plan_landmark_device,
     systolic_nng,
+    tree_traverse,
 )

@@ -54,6 +54,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -61,10 +62,36 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map as _shard_map
-from repro.kernels import nng_tile_bits, nng_tile_bits_grouped
+from repro.kernels import (nng_tile_bits, nng_tile_bits_grouped,
+                           nng_tile_geometry, tree_frontier_step)
+from repro.kernels.nng_tile import _pack_words
+from repro.kernels.tree_frontier import _unpack_words
 from repro.kernels.ops import pallas_mode as _pallas_mode
 
 SENTINEL = jnp.int32(2**31 - 1)
+
+
+class DeviceForest(NamedTuple):
+    """Device-resident levelized cover-tree forest (one rank's tables, or
+    rank-stacked with a leading axis — see ``flat_tree.stack_device_forests``).
+
+    Shapes (single rank): coords (L, N, d); radius/cell/leaf/parent/
+    leaf_lo/leaf_hi (L, N); leaf_ids (n_leaf,) global point ids in forest
+    DFS order, SENTINEL-padded.
+    """
+
+    coords: jax.Array
+    radius: jax.Array
+    cell: jax.Array
+    leaf: jax.Array
+    parent: jax.Array
+    leaf_lo: jax.Array
+    leaf_hi: jax.Array
+    leaf_ids: jax.Array
+
+    @classmethod
+    def from_tables(cls, tables: dict) -> "DeviceForest":
+        return cls(**{k: jnp.asarray(v) for k, v in tables.items()})
 
 
 # ---------------------------------------------------------------------------
@@ -163,6 +190,73 @@ def _bits_to_gathered_ids(bits, ids_row, k):
 def _popcount_rows(bits):
     """Exact per-row hit counts from the packed bitmask -> (m,) int32."""
     return jnp.sum(jax.lax.population_count(bits).astype(jnp.int32), axis=-1)
+
+
+def tree_traverse(qp, qids, qcells, forest: DeviceForest, eps, k_cap: int,
+                  metric: str):
+    """Level-synchronous batched cover-tree traversal on device.
+
+    A ``lax.scan`` over the forest's levels. Each level:
+
+      1. active mask (jnp): a node is active for a query iff its parent's
+         expand bit survived the previous level, the slot is valid, and the
+         node's cell matches the query's cell (the in-cell scoping that
+         makes cells the level-1 cover).
+      2. frontier kernel (``repro.kernels.tree_frontier``): fused distance
+         + {emit, expand} decisions, packed survivor bitmasks; blocks with
+         no active pair are skipped without touching the MXU.
+      3. leaf-range emission: emitted nodes contribute their whole DFS leaf
+         range via a ±1 scatter into a per-query range-delta accumulator —
+         NO per-leaf distances for fully-included balls. One cumsum at the
+         end turns the deltas into the per-query leaf coverage mask.
+
+    Self pairs are excluded by global-id inequality (qids vs leaf_ids),
+    mirroring the grouped tile kernel's structural exclusion.
+
+    Returns (nbrs (nq, k_cap) sorted SENTINEL-padded ids, cnt (nq,) exact
+    counts, dists_evaluated, nodes_pruned) — the counters are float32
+    scalars (exact below 2^24, fp32-approximate beyond; int32 would wrap
+    at paper scale) with the same definitions the host ``TraversalStats``
+    mirrors: frontier pairs whose distance was computed, and frontier
+    pairs whose subtree was discarded after that single distance.
+    """
+    nq = qp.shape[0]
+    L, N = forest.radius.shape
+    n_leaf = forest.leaf_ids.shape[0]
+    qcells = jnp.asarray(qcells, jnp.int32)
+
+    ones = jnp.full((nq, N // 32), jnp.uint32(0xFFFFFFFF))
+    delta0 = jnp.zeros((nq, n_leaf + 1), jnp.int32)
+
+    def body(carry, xs):
+        prev_bits, delta, dists, pruned = carry
+        coords, rad, cell, leaf, parent, lo, hi = xs
+        pw = parent // 32
+        pb = (parent % 32).astype(jnp.uint32)
+        pwords = jnp.take(prev_bits, pw, axis=1)            # (nq, N)
+        pbit = ((pwords >> pb[None, :]) & 1) == 1
+        active = pbit & (cell[None, :] >= 0) & (cell[None, :] == qcells[:, None])
+        act_bits = _pack_words(active)
+        emit_bits, exp_bits = tree_frontier_step(
+            qp, coords, rad, leaf, act_bits, eps, metric)
+        emit_i = _unpack_words(emit_bits)[:, :N].astype(jnp.int32)
+        delta = delta.at[:, lo].add(emit_i).at[:, hi].add(-emit_i)
+        dists = dists + jnp.sum(_popcount_rows(act_bits)).astype(jnp.float32)
+        pruned = pruned + jnp.sum(_popcount_rows(
+            act_bits & ~(emit_bits | exp_bits))).astype(jnp.float32)
+        return (exp_bits, delta, dists, pruned), None
+
+    xs = (forest.coords, forest.radius, forest.cell, forest.leaf,
+          forest.parent, forest.leaf_lo, forest.leaf_hi)
+    (_, delta, dists, pruned), _ = jax.lax.scan(
+        body, (ones, delta0, jnp.float32(0), jnp.float32(0)), xs)
+    cover = jnp.cumsum(delta, axis=1)[:, :n_leaf] > 0
+    cover = cover & (forest.leaf_ids != SENTINEL)[None, :]
+    cover = cover & (qids[:, None] != forest.leaf_ids[None, :])
+    cnt = jnp.sum(cover.astype(jnp.int32), axis=1)
+    bits = _pack_words(cover)
+    nbrs = _bits_to_gathered_ids(bits, forest.leaf_ids, k_cap)
+    return nbrs, cnt, dists, pruned
 
 
 # ---------------------------------------------------------------------------
@@ -299,7 +393,88 @@ def _systolic_local(x, ids, *, axis, nranks, eps, metric, k_cap, prune):
         nbrs = _merge_ids(nbrs, ynbrs)
         cnt = cnt + ycnt
     overflow = jnp.any(cnt > k_cap)[None]
-    return nbrs, cnt, overflow, tiles_skipped[None]
+    # tile-granular work counter: every evaluated ring round computes the
+    # full n_loc × n_loc distance tile (no in-tile pruning on this path).
+    # float32 like the tree counters — int32 wraps at n_loc >= 2^15.5
+    dists = (jnp.sum(do_eval.astype(jnp.float32))
+             * jnp.float32(float(n_loc) * float(n_loc)))
+    return (nbrs, cnt, overflow, tiles_skipped[None], dists[None],
+            jnp.zeros((1,), jnp.float32))
+
+
+def _systolic_local_tree(x, ids, *forest_arrays, axis, nranks, eps, metric,
+                         k_cap, prune):
+    """Per-shard systolic body, cover-tree traversal flavor.
+
+    The levelized forest tables describe THIS rank's block tree (built once
+    host-side by ``flat_tree.build_block_forests``). They rotate around the
+    ring together with the block: each ring step runs two level-synchronous
+    traversals instead of two dense tiles — my points query the visiting
+    block's tree (forward edges) and the visiting points query my tree
+    (mirror accumulator) — so the in-tree triangle-inequality prune now
+    fires *inside* every ring tile. Block-summary pruning still skips whole
+    rounds above it.
+    """
+    n_loc = x.shape[0]
+    forest = DeviceForest(*[a[0] for a in forest_arrays])   # drop rank dim
+    perm = [(i, (i - 1) % nranks) for i in range(nranks)]
+    me = jax.lax.axis_index(axis)
+    rounds = nranks // 2
+    qcells = jnp.zeros((n_loc,), jnp.int32)
+
+    rr = jnp.arange(rounds + 1)
+    partner = (me + rr) % nranks
+    skip = _round_skip_flags(x, partner, eps,
+                             axis=axis, metric=metric, prune=prune)
+    if nranks % 2 == 0 and rounds > 0:
+        sched = jnp.where(rr == rounds, me < partner, True)
+    else:
+        sched = jnp.ones((rounds + 1,), bool)
+    do_eval = sched & ~skip
+    tiles_skipped = jnp.sum((sched & skip).astype(jnp.int32))
+
+    def trav(qp, qids, fr):
+        return tree_traverse(qp, qids, qcells, fr, eps, k_cap, metric)
+
+    def step(r, carry):
+        y, yids, yforest, ynbrs, ycnt, nbrs, cnt, dists, pruned = carry
+        y = jax.lax.ppermute(y, axis, perm)
+        yids = jax.lax.ppermute(yids, axis, perm)
+        yforest = jax.tree.map(
+            lambda a: jax.lax.ppermute(a, axis, perm), yforest)
+        ynbrs = jax.lax.ppermute(ynbrs, axis, perm)
+        ycnt = jax.lax.ppermute(ycnt, axis, perm)
+
+        def _eval(acc):
+            nbrs_, cnt_, ynbrs_, ycnt_, d_, p_ = acc
+            fn, fc, fd, fp = trav(x, ids, yforest)   # my pts vs visiting tree
+            rn, rc, rd, rp = trav(y, yids, forest)   # visiting pts vs my tree
+            return (_merge_ids(nbrs_, fn), cnt_ + fc,
+                    _merge_ids(ynbrs_, rn), ycnt_ + rc,
+                    d_ + fd + rd, p_ + fp + rp)
+
+        nbrs, cnt, ynbrs, ycnt, dists, pruned = jax.lax.cond(
+            do_eval[r], _eval, lambda acc: acc,
+            (nbrs, cnt, ynbrs, ycnt, dists, pruned))
+        return y, yids, yforest, ynbrs, ycnt, nbrs, cnt, dists, pruned
+
+    nbrs0 = jnp.full((n_loc, k_cap), SENTINEL, dtype=jnp.int32)
+    cnt0 = jnp.zeros((n_loc,), dtype=jnp.int32)
+    # round 0 (self tile): one traversal of my own tree; the global-id
+    # inequality inside tree_traverse excludes self pairs structurally
+    nbrs, cnt, dists, pruned = trav(x, ids, forest)
+    if rounds > 0:
+        (_, _, _, ynbrs, ycnt, nbrs, cnt, dists, pruned) = jax.lax.fori_loop(
+            1, rounds + 1, step,
+            (x, ids, forest, nbrs0, cnt0, nbrs, cnt, dists, pruned))
+        perm_home = [(i, (i + rounds) % nranks) for i in range(nranks)]
+        ynbrs = jax.lax.ppermute(ynbrs, axis, perm_home)
+        ycnt = jax.lax.ppermute(ycnt, axis, perm_home)
+        nbrs = _merge_ids(nbrs, ynbrs)
+        cnt = cnt + ycnt
+    overflow = jnp.any(cnt > k_cap)[None]
+    return (nbrs, cnt, overflow, tiles_skipped[None], dists[None],
+            pruned[None])
 
 
 def make_nng_mesh(nranks: int | None = None) -> Mesh:
@@ -309,8 +484,12 @@ def make_nng_mesh(nranks: int | None = None) -> Mesh:
     return Mesh(devs, ("ring",))
 
 
+_N_FOREST = len(DeviceForest._fields)
+
+
 @functools.lru_cache(maxsize=64)
-def _systolic_fn(mesh, eps, metric, k_cap, axis, prune, pallas_mode):
+def _systolic_fn(mesh, eps, metric, k_cap, axis, prune, pallas_mode,
+                 traversal):
     """Memoized jitted shard_map program: rebuilding the closure per call
     defeats the jit cache (every invocation would retrace + recompile, and
     compile dominates wall clock on re-plan loops / benchmarks). Mesh and
@@ -320,15 +499,25 @@ def _systolic_fn(mesh, eps, metric, k_cap, axis, prune, pallas_mode):
     ``pallas_mode`` (the resolved REPRO_PALLAS value) is part of the key
     because the tile wrappers read it at TRACE time — without it, flipping
     the env mid-process would silently reuse a program traced under the
-    old mode."""
+    old mode. ``traversal`` selects the dense-tile vs cover-tree body
+    (different arities); forest table SHAPES are not part of the key — jit
+    retraces per shape as usual."""
     nranks = mesh.shape[axis]
-    body = functools.partial(
-        _systolic_local, axis=axis, nranks=nranks, eps=eps,
-        metric=metric, k_cap=k_cap, prune=prune)
+    if traversal == "tree":
+        body = functools.partial(
+            _systolic_local_tree, axis=axis, nranks=nranks, eps=eps,
+            metric=metric, k_cap=k_cap, prune=prune)
+        in_specs = (P(axis, None), P(axis)) + (P(axis),) * _N_FOREST
+    else:
+        body = functools.partial(
+            _systolic_local, axis=axis, nranks=nranks, eps=eps,
+            metric=metric, k_cap=k_cap, prune=prune)
+        in_specs = (P(axis, None), P(axis))
     return jax.jit(_shard_map(
         body, mesh,
-        in_specs=(P(axis, None), P(axis)),
-        out_specs=(P(axis, None), P(axis), P(axis), P(axis)),
+        in_specs=in_specs,
+        out_specs=(P(axis, None), P(axis), P(axis), P(axis), P(axis),
+                   P(axis)),
     ))
 
 
@@ -341,16 +530,30 @@ def systolic_nng(
     k_cap: int = 64,
     axis: str = "ring",
     prune: bool = True,
+    traversal: str = "tiles",
+    forest: dict | None = None,
 ):
     """Distributed exact ε-NNG via the sparsity-aware systolic ring.
 
-    Returns (nbrs, cnt, overflow, tiles_skipped):
+    ``traversal="tiles"`` (default) evaluates each ring tile with the fused
+    bitmask kernel; ``traversal="tree"`` traverses per-block cover trees
+    (``forest`` = rank-stacked tables from ``flat_tree.build_block_forests``
+    + ``stack_device_forests``) so the triangle-inequality prune fires
+    inside every tile, not just at block granularity.
+
+    Returns (nbrs, cnt, overflow, tiles_skipped, dists_evaluated,
+    nodes_pruned):
       - nbrs (n, k_cap) int32 neighbor ids (SENTINEL-padded),
       - cnt (n,) exact neighbor counts,
       - overflow (nranks,) bool — grow k_cap and re-run if any is set
         (``repro.launch.nng_run.run_systolic`` automates this),
       - tiles_skipped (nranks,) int32 — ring tiles pruned per rank by the
-        block-summary triangle-inequality test (``prune=False`` disables).
+        block-summary triangle-inequality test (``prune=False`` disables),
+      - dists_evaluated (nranks,) float32 — pair distances evaluated per
+        rank (dense n_loc² per evaluated round on the tiles path; frontier
+        pairs on the tree path; fp32 so paper-scale counts can't wrap),
+      - nodes_pruned (nranks,) float32 — tree-path frontier pairs whose
+        subtree was discarded (0 on the tiles path).
 
     ``points`` rows must be a multiple of the ring size (pad upstream with
     far-away sentinel points if needed; repro.launch handles this).
@@ -360,7 +563,11 @@ def systolic_nng(
     assert n % nranks == 0, (n, nranks)
     ids = jnp.arange(n, dtype=jnp.int32)
     fn = _systolic_fn(mesh, float(eps), metric, k_cap, axis, prune,
-                      _pallas_mode())
+                      _pallas_mode(), traversal)
+    if traversal == "tree":
+        assert forest is not None, "traversal='tree' needs stacked forests"
+        ftabs = DeviceForest.from_tables(forest)
+        return fn(points, ids, *ftabs)
     return fn(points, ids)
 
 
@@ -391,6 +598,78 @@ def plan_landmark(
         cap_ghost=int(per_pair * skew) + 8,
         g_per_pt=8,
         k_cap=int(avg_degree_hint * skew),
+    )
+
+
+def _plan_count_local(x, centers, f, *, axis, nranks, eps, two_eps_c,
+                      metric):
+    """Per-shard capacity counting pass: EXACT per-(src, dst) coalesce and
+    ghost-copy counts plus the max ghost fanout, using the SAME Voronoi
+    assignment and slacked Lemma-1 bound the engine itself applies — so the
+    returned capacities are exactly what the engine's buffers need."""
+    n_loc = x.shape[0]
+    m = centers.shape[0]
+    dpc = tile_cdist(x, centers, metric)
+    cell = jnp.argmin(dpc, axis=1).astype(jnp.int32)
+    d_min = jnp.min(dpc, axis=1)
+    dest = f[cell]
+    coal = jnp.zeros((nranks,), jnp.int32).at[dest].add(1)
+    tru, gbound = _lemma1_ghost_bound(x, centers, dpc, d_min, two_eps_c,
+                                      metric)
+    gmask = (tru <= gbound[:, None]) & (
+        jnp.arange(m)[None, :] != cell[:, None])
+    g_per_pt = jnp.max(jnp.sum(gmask.astype(jnp.int32), axis=1))
+    # ghosts into cell c land on rank f[c]: segment-sum the per-cell ghost
+    # column counts by destination rank
+    gcol = jnp.sum(gmask.astype(jnp.int32), axis=0)
+    ghost = jnp.zeros((nranks,), jnp.int32).at[f].add(gcol)
+    # all-reduce the maxima across ranks (one collective each)
+    coal_max = jnp.max(jax.lax.all_gather(coal, axis))
+    ghost_max = jnp.max(jax.lax.all_gather(ghost, axis))
+    gpp_max = jnp.max(jax.lax.all_gather(g_per_pt[None], axis))
+    return coal_max[None], ghost_max[None], gpp_max[None]
+
+
+@functools.lru_cache(maxsize=64)
+def _plan_count_fn(mesh, eps, metric, axis, pallas_mode):
+    nranks = mesh.shape[axis]
+    body = functools.partial(
+        _plan_count_local, axis=axis, nranks=nranks, eps=eps,
+        two_eps_c=2.0 * eps, metric=metric)
+    return jax.jit(_shard_map(
+        body, mesh,
+        in_specs=(P(axis, None), P(), P()),
+        out_specs=(P(axis), P(axis), P(axis)),
+    ))
+
+
+def plan_landmark_device(
+    points, centers, f, eps: float, mesh: Mesh, *,
+    metric: str = "euclidean", axis: str = "ring", k_cap: int = 128,
+    pad: int = 8,
+) -> LandmarkPlan:
+    """EXACT landmark capacity planning as ONE shard_map counting pass.
+
+    Replaces the host heuristic + overflow → ``grow_plan`` re-run loop for
+    the common case: each rank bincounts its coalesce destinations and its
+    slacked-Lemma-1 ghost copies per destination rank (the same tests the
+    engine applies), an all-reduce takes the maxima, and the returned
+    ``LandmarkPlan`` capacities are exact (+``pad`` slop). Only ``k_cap``
+    (the neighbor-list width) remains a heuristic the overflow loop may
+    still grow.
+    """
+    nranks = mesh.shape[axis]
+    n, _ = points.shape
+    assert n % nranks == 0, (n, nranks)
+    fn = _plan_count_fn(mesh, float(eps), metric, axis, _pallas_mode())
+    coal, ghost, gpp = fn(jnp.asarray(points), jnp.asarray(centers),
+                          jnp.asarray(f, jnp.int32))
+    return LandmarkPlan(
+        m_centers=int(np.asarray(centers).shape[0]),
+        cap_coal=int(np.asarray(coal)[0]) + pad,
+        cap_ghost=max(int(np.asarray(ghost)[0]), 1) + pad,
+        g_per_pt=max(int(np.asarray(gpp)[0]), 1),
+        k_cap=k_cap,
     )
 
 
@@ -463,16 +742,35 @@ def _cell_sort(key_cell, valid, m, *arrays):
 
 
 def _landmark_local(
-    x, ids, centers, f, *, axis, nranks, eps, two_eps_c, metric, plan
+    x, ids, centers, f, *tree_args, axis, nranks, eps, two_eps_c,
+    metric, plan, traversal="tiles",
 ):
     """Per-shard landmark body. x (n_loc, d); centers (m, d) replicated;
-    f (m,) cell->rank assignment (host-planned LPT)."""
+    f (m,) cell->rank assignment (host-planned LPT).
+
+    ``traversal="tree"``: ``tree_args`` is (cell_in, *forest_arrays) —
+    Phases 3 + 4 traverse this rank's per-cell cover-tree forest (built
+    host-side over the cells LPT-assigned to the rank) instead of running
+    the grouped dense tiles: the paper's per-cell cover-tree query,
+    pruning *within* each cell. ``cell_in`` is the SAME (sharded) Voronoi
+    assignment the forests were built from — the engine must not recompute
+    its own fp32 argmin, or a near-tie disagreement would scope a query to
+    a tree that does not contain its point and silently drop edges."""
     n_loc = x.shape[0]
     m = centers.shape[0]
+    if traversal == "tree":
+        cell_in, forest_arrays = tree_args[0], tree_args[1:]
+        forest = DeviceForest(*[a[0] for a in forest_arrays])
+    else:
+        cell_in, forest = None, None
 
     # -- Phase 1: Voronoi assignment (one (n_loc, m) MXU tile) --------------
     dpc = tile_cdist(x, centers, metric)          # comparable distances
-    cell = jnp.argmin(dpc, axis=1).astype(jnp.int32)
+    cell = (cell_in.astype(jnp.int32) if cell_in is not None
+            else jnp.argmin(dpc, axis=1).astype(jnp.int32))
+    # d(p, C) stays the true fp32 min over ALL centers: with a provided
+    # assignment, d(p, c_cell) may exceed d_min by a knife-edge ulp — the
+    # slacked Lemma-1 bound absorbs exactly that gap
     d_min = jnp.min(dpc, axis=1)
 
     # -- Phase 2: coalesce cells via capacity-padded all_to_all -------------
@@ -496,13 +794,23 @@ def _landmark_local(
         Wcell, Wvalid, m, W, Wids, Wcell, Wvalid)
     Wgrp = jnp.where(Wvalid, Wcell, jnp.int32(-1))
 
-    # -- Phase 3: intra-cell queries (group-aware fused bitmask tile; the
-    # per-cell cover-tree prune becomes the fused same-cell test — cells
-    # are the level-1 cover). Only packed adjacency words + exact counts
-    # reach HBM; all-padding / cross-cell blocks are skipped in-kernel. ----
-    cnt, bits, w_sched, w_skip = nng_tile_bits_grouped(
-        W, W, Wgrp, Wgrp, Wids, Wids, eps, metric=metric)
-    nbrs = _bits_to_gathered_ids(bits, Wids, plan.k_cap)
+    # -- Phase 3: intra-cell queries. Tiles flavor: group-aware fused
+    # bitmask tile (cells are the level-1 cover, pruning at block
+    # granularity). Tree flavor: level-synchronous traversal of the rank's
+    # per-cell cover-tree forest — the in-cell levels BELOW the cell cover,
+    # pruning inside each cell too. ---------------------------------------
+    if traversal == "tree":
+        nbrs, cnt, w_dists, w_pruned = tree_traverse(
+            W, Wids, Wgrp, forest, eps, plan.k_cap, metric)
+        w_sched = w_skip = jnp.int32(0)
+    else:
+        cnt, bits, w_sched, w_skip = nng_tile_bits_grouped(
+            W, W, Wgrp, Wgrp, Wids, Wids, eps, metric=metric)
+        nbrs = _bits_to_gathered_ids(bits, Wids, plan.k_cap)
+        tq, tp = nng_tile_geometry(W.shape[0], W.shape[0], metric)
+        w_dists = ((w_sched - w_skip).astype(jnp.float32)
+                   * jnp.float32(tq * tp))
+        w_pruned = jnp.float32(0)
 
     # -- Phase 4: ε-ghost exchange (Lemma 1, scale-aware fp32 slack) --------
     tru, gbound = _lemma1_ghost_bound(x, centers, dpc, d_min, two_eps_c,
@@ -537,13 +845,22 @@ def _landmark_local(
         Gcell, Gvalid, m, G, Gids, Gcell, Gvalid)
     Ggrp = jnp.where(Gvalid, Gcell, jnp.int32(-1))
 
-    # ghost G×W queries through the same grouped fused tile (a ghost copy
-    # carries its TARGET cell id, so group equality scopes it to that cell;
+    # ghost G×W queries: a ghost copy carries its TARGET cell id, so cell
+    # scoping (group equality / tree cell match) confines it to that cell;
     # its own W row sits in a different cell and is excluded by the group
-    # test — and id inequality guards the degenerate single-cell case).
-    gcnt, gbits, g_sched, g_skip = nng_tile_bits_grouped(
-        G, W, Ggrp, Wgrp, Gids, Wids, eps, metric=metric)
-    gnbrs = _bits_to_gathered_ids(gbits, Wids, plan.k_cap)
+    # test — and id inequality guards the degenerate single-cell case.
+    if traversal == "tree":
+        gnbrs, gcnt, g_dists, g_pruned = tree_traverse(
+            G, Gids, Ggrp, forest, eps, plan.k_cap, metric)
+        g_sched = g_skip = jnp.int32(0)
+    else:
+        gcnt, gbits, g_sched, g_skip = nng_tile_bits_grouped(
+            G, W, Ggrp, Wgrp, Gids, Wids, eps, metric=metric)
+        gnbrs = _bits_to_gathered_ids(gbits, Wids, plan.k_cap)
+        gtq, gtp = nng_tile_geometry(G.shape[0], W.shape[0], metric)
+        g_dists = ((g_sched - g_skip).astype(jnp.float32)
+                   * jnp.float32(gtq * gtp))
+        g_pruned = jnp.float32(0)
 
     overflow = (
         (dropped_c > 0) | (dropped_g > 0) | (g_dropped > 0)
@@ -551,8 +868,10 @@ def _landmark_local(
     )[None]
     tiles_skipped = (w_skip + g_skip)[None]
     tiles_scheduled = (w_sched + g_sched)[None]
+    dists_evaluated = (w_dists + g_dists)[None]
+    nodes_pruned = (w_pruned + g_pruned)[None]
     return (Wids, nbrs, cnt, Gids, gnbrs, gcnt, overflow,
-            tiles_skipped, tiles_scheduled)
+            tiles_skipped, tiles_scheduled, dists_evaluated, nodes_pruned)
 
 
 def landmark_nng(
@@ -565,25 +884,47 @@ def landmark_nng(
     *,
     metric: str = "euclidean",
     axis: str = "ring",
+    traversal: str = "tiles",
+    forest: dict | None = None,
+    cell=None,
 ):
     """Distributed landmark ε-NNG (collective ghosts). Returns
     (Wids, nbrs, cnt, Gids, gnbrs, gcnt, overflow, tiles_skipped,
-    tiles_scheduled): owned-point and ghost-copy neighbor lists keyed by
-    global point id, plus per-rank (nranks,) int32 counters of grouped-tile
-    blocks skipped/scheduled by the cell-sorted fast path (Phases 3 + 4).
-    The union of (Wids → nbrs) and (Gids → gnbrs) edges is the exact
-    ε-graph when ``overflow`` is False.
+    tiles_scheduled, dists_evaluated, nodes_pruned): owned-point and
+    ghost-copy neighbor lists keyed by global point id, plus per-rank
+    (nranks,) counters — grouped-tile blocks skipped/scheduled (int32,
+    tiles flavor) by the cell-sorted fast path, and pair distances
+    evaluated / tree frontier pairs pruned (float32, both flavors; the
+    tiles flavor counts tq×tp pairs per live block, the tree flavor counts
+    frontier pairs of the level-synchronous per-cell traversal). The union of (Wids → nbrs)
+    and (Gids → gnbrs) edges is the exact ε-graph when ``overflow`` is
+    False.
+
+    ``traversal="tree"`` needs ``forest`` (the rank-stacked per-cell
+    cover-tree tables from ``flat_tree.build_cell_forests`` +
+    ``stack_device_forests``) AND ``cell`` (the (n,) Voronoi assignment
+    those forests were built from — fed to the engine so Phase 1 cannot
+    diverge from the forest scoping on argmin near-ties).
     """
     nranks = mesh.shape[axis]
     n, _ = points.shape
     assert n % nranks == 0, (n, nranks)
     ids = jnp.arange(n, dtype=jnp.int32)
-    fn = _landmark_fn(mesh, float(eps), metric, plan, axis, _pallas_mode())
+    fn = _landmark_fn(mesh, float(eps), metric, plan, axis, _pallas_mode(),
+                      traversal)
+    if traversal == "tree":
+        assert forest is not None, "traversal='tree' needs stacked forests"
+        assert cell is not None, ("traversal='tree' needs the cell "
+                                  "assignment the forests were built from")
+        ftabs = DeviceForest.from_tables(forest)
+        return fn(points, ids, centers, f,
+                  jnp.asarray(cell, jnp.int32), *ftabs)
     return fn(points, ids, centers, f)
 
 
 @functools.lru_cache(maxsize=64)
-def _landmark_fn(mesh, eps, metric, plan, axis, pallas_mode):
+def _landmark_fn(mesh, eps, metric, plan, axis, pallas_mode,
+                 traversal="tiles"):
     """Memoized jitted shard_map program (see ``_systolic_fn``, including
     the ``pallas_mode`` key); the frozen ``LandmarkPlan`` is the static
     capacity key, so only genuine re-plans (grown capacities) pay a
@@ -591,11 +932,14 @@ def _landmark_fn(mesh, eps, metric, plan, axis, pallas_mode):
     nranks = mesh.shape[axis]
     body = functools.partial(
         _landmark_local, axis=axis, nranks=nranks, eps=eps,
-        two_eps_c=2.0 * eps, metric=metric, plan=plan)
+        two_eps_c=2.0 * eps, metric=metric, plan=plan, traversal=traversal)
+    in_specs = (P(axis, None), P(axis), P(), P())
+    if traversal == "tree":
+        in_specs = in_specs + (P(axis),) * (1 + _N_FOREST)   # cell + forest
     return jax.jit(_shard_map(
         body, mesh,
-        in_specs=(P(axis, None), P(axis), P(), P()),
+        in_specs=in_specs,
         out_specs=(P(axis), P(axis, None), P(axis),
                    P(axis), P(axis, None), P(axis), P(axis),
-                   P(axis), P(axis)),
+                   P(axis), P(axis), P(axis), P(axis)),
     ))

@@ -17,6 +17,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .covertree import build_covertree
+from .flat_tree import TraversalStats
 from .graph import EpsGraph
 from .landmark import ghost_membership, lpt_assignment, select_centers
 from .metrics_host import get_host_metric
@@ -31,6 +32,11 @@ class PhaseStats:
     per_rank_s: np.ndarray | None = None   # simulated per-rank compute time
     tiles_scheduled: int = 0   # systolic: tiles the ring schedule would run
     tiles_skipped: int = 0     # systolic: tiles pruned by block summaries
+    # cover-tree traversal work counters (mirror the device engine's
+    # tree-traversal counters: frontier pairs whose distance was computed /
+    # whose subtree was discarded after that one distance)
+    dists_evaluated: int = 0
+    nodes_pruned: int = 0
 
     @property
     def total_s(self):
@@ -137,8 +143,12 @@ def systolic_ring_host(
                 stats.tiles_skipped += 1
                 continue
             tq0 = time.perf_counter()
-            qi, pj = trees[j].query(points[starts[b]:starts[b + 1]], eps)
+            ts = TraversalStats()
+            qi, pj = trees[j].query(points[starts[b]:starts[b + 1]], eps,
+                                    stats=ts)
             per_rank[j] += time.perf_counter() - tq0
+            stats.dists_evaluated += ts.dists_evaluated
+            stats.nodes_pruned += ts.nodes_pruned
             src.append(qi + starts[b])
             dst.append(pj + starts[j])
     stats.ghost_s += time.perf_counter() - t0  # "query" phase for systolic
@@ -229,8 +239,11 @@ def landmark_host(
         tq0 = time.perf_counter()
         cell_members[ci] = members
         trees[ci] = build_covertree(points[members], metric, leaf_size)
-        qi, pj = trees[ci].query(points[members], eps)
+        ts = TraversalStats()
+        qi, pj = trees[ci].query(points[members], eps, stats=ts)
         per_rank[f[ci]] += time.perf_counter() - tq0
+        stats.dists_evaluated += ts.dists_evaluated
+        stats.nodes_pruned += ts.nodes_pruned
         src.append(members[qi])
         dst.append(members[pj])
     stats.tree_s += time.perf_counter() - t0
@@ -244,8 +257,11 @@ def landmark_host(
         if len(gpts) == 0:
             continue
         tq0 = time.perf_counter()
-        qi, pj = trees[ci].query(points[gpts], eps)
+        ts = TraversalStats()
+        qi, pj = trees[ci].query(points[gpts], eps, stats=ts)
         per_rank[f[ci]] += time.perf_counter() - tq0
+        stats.dists_evaluated += ts.dists_evaluated
+        stats.nodes_pruned += ts.nodes_pruned
         src.append(gpts[qi])
         dst.append(members[pj])
     stats.ghost_s += time.perf_counter() - t0

@@ -10,4 +10,5 @@ from .ops import (  # noqa: F401
     nng_tile_geometry,
     pairwise_hamming,
     pairwise_sqdist,
+    tree_frontier_step,
 )

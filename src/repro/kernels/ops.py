@@ -27,6 +27,9 @@ from .nng_tile import (_GBIG, nng_tile_grouped_hamming_pallas,
                        nng_tile_hamming_ref, nng_tile_pallas, nng_tile_ref)
 from .pairwise_hamming import pairwise_hamming_pallas
 from .pairwise_l2 import pairwise_sqdist_pallas
+from .tree_frontier import (tree_frontier_hamming_pallas,
+                            tree_frontier_hamming_ref, tree_frontier_pallas,
+                            tree_frontier_ref)
 
 _BIG = jnp.float32(3.0e38)
 
@@ -284,6 +287,64 @@ def nng_tile_bits_grouped(
         cnt, bits = fn(xp, yp, xgp, ygp, xidp, yidp, float(eps), tq, tp,
                        mode == "interpret")
     return cnt[:q], bits[:q, :nw], scheduled, skipped
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "tq", "tn", "interpret"))
+def _tree_frontier_l2_padded(q, c, rad, leaf, act, eps, tq, tn, interpret):
+    return tree_frontier_pallas(q, c, rad, leaf, act, eps, tq=tq, tn=tn,
+                                interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "tq", "tn", "interpret"))
+def _tree_frontier_ham_padded(q, c, rad, leaf, act, eps, tq, tn, interpret):
+    return tree_frontier_hamming_pallas(q, c, rad, leaf, act, eps, tq=tq,
+                                        tn=tn, interpret=interpret)
+
+
+def tree_frontier_step(q, c, rad, leaf, act_bits, eps: float,
+                       metric: str = "euclidean"):
+    """One level of the batched cover-tree traversal, fused.
+
+    q (nq, d) queries; c (N, d) level-node coords; rad (N,) fp32 radii;
+    leaf (N,) int32 leaf flags; act_bits (nq, N/32) packed active mask
+    (N % 32 == 0 — the flat-tree builder guarantees it). Returns
+    (emit_bits, expand_bits), each (nq, N/32) uint32: nodes whose DFS leaf
+    range joins the query's neighbor set, and nodes whose children enter
+    the next level's frontier (see ``repro.kernels.tree_frontier`` for the
+    decision rules and fp32 slack policy). Pads to tile multiples
+    internally; pad rows/columns are inactive and emit nothing.
+    """
+    mode = _mode()
+    nq = q.shape[0]
+    N = c.shape[0]
+    assert N % 32 == 0, N
+    nw = N // 32
+    rad = jnp.asarray(rad, jnp.float32)
+    leaf = jnp.asarray(leaf, jnp.int32)
+    act_bits = jnp.asarray(act_bits, jnp.uint32)
+    dtype = jnp.float32 if metric == "euclidean" else jnp.uint32
+    q = jnp.asarray(q, dtype)
+    c = jnp.asarray(c, dtype)
+    if mode == "jnp":
+        reff = (tree_frontier_ref if metric == "euclidean"
+                else tree_frontier_hamming_ref)
+        return reff(q, c, rad, leaf, act_bits, eps)
+    tq, tn = nng_tile_geometry(nq, N, metric)
+    qp, _ = _pad_rows(q, tq)
+    actp, _ = _pad_rows(act_bits, tq)
+    cp, _ = _pad_rows(c, tn)
+    radp, _ = _pad_rows(rad, tn)
+    leafp, _ = _pad_rows(leaf, tn)
+    # node-axis padding extends the WORD axis of the packed masks
+    actp = jnp.pad(actp, [(0, 0), (0, tn * ((N + tn - 1) // tn) // 32 - nw)])
+    cmul = 128 if metric == "euclidean" else 8
+    qp = _pad_cols(qp, cmul)
+    cp = _pad_cols(cp, cmul)
+    fn = (_tree_frontier_l2_padded if metric == "euclidean"
+          else _tree_frontier_ham_padded)
+    emit, expand = fn(qp, cp, radp, leafp, actp, float(eps), tq, tn,
+                      mode == "interpret")
+    return emit[:nq, :nw], expand[:nq, :nw]
 
 
 @jax.jit

@@ -1,0 +1,214 @@
+"""Level-synchronous cover-tree frontier kernels (device tree traversal).
+
+One traversal level of the batched cover-tree query (Alg. 3) is a dense
+(frontier queries × level nodes) decision tile. These kernels fuse the
+distance computation with the three per-pair decisions and emit only two
+packed survivor bitmasks (the PR 1/2 bitmask idiom — 1/128 the bytes of an
+fp32 decision tile):
+
+  emit[q, v]    the node's whole DFS leaf range joins q's neighbor set:
+                  leaf node:     d(q, v) <= eps        (EXACT, the same
+                                 fp32 arithmetic as the flat tile kernels)
+                  internal node: d(q, v) + radius(v) <= eps - slack
+                                 (full inclusion, conservatively shrunk by
+                                 a scale-relative fp32 slack — a borderline
+                                 inclusion demotes to expansion and gets
+                                 decided exactly at the leaves)
+  expand[q, v]  the node's children enter the next level's frontier:
+                  d(q, v) <= radius(v) + eps + slack   (triangle prune,
+                                 over-expansion is always safe)
+
+``active`` (packed, computed by the traversal driver from the previous
+level's expand mask + cell scoping) gates everything; a (TQ × TN) block
+whose active words are all zero early-outs without touching the MXU — the
+in-cell analogue of the grouped kernel's block skip.
+
+Hamming distances are exact integers: both slacks are zero and every
+decision is exact at every level.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .nng_tile import _hamming_tile_d, _l2_tile_d2, _pack_words
+
+
+def _unpack_words(bits):
+    """(TQ, W) uint32 -> (TQ, 32*W) bool, little-endian bit order (the
+    inverse of ``_pack_words``)."""
+    tq, w = bits.shape
+    bitpos = jnp.arange(32, dtype=jnp.uint32)
+    b = ((bits[:, :, None] >> bitpos[None, None, :]) & 1) == 1
+    return b.reshape(tq, w * 32)
+
+
+def _frontier_masks_l2(d2, rad, leaf, active, eps):
+    """Shared L2 decision epilogue: (TQ, TN) d2 tile -> (emit, expand)."""
+    eps_f = jnp.float32(eps)
+    d = jnp.sqrt(jnp.maximum(d2, 0.0))
+    radr = rad[None, :]
+    # scale-relative fp32 slack (same family as the block-summary prune and
+    # Lemma-1 slacks): also covers the fp32 rounding of the float64 radii
+    slack = (d + radr + eps_f) * jnp.float32(1e-5) + jnp.float32(1e-6)
+    leafb = (leaf != 0)[None, :]
+    leaf_hit = d2 <= eps_f * eps_f
+    incl = d + radr <= eps_f - slack
+    emit = active & jnp.where(leafb, leaf_hit, incl)
+    expand = active & ~leafb & ~emit & (d <= radr + eps_f + slack)
+    return emit, expand
+
+
+def _frontier_masks_hamming(d, rad, leaf, active, eps):
+    """Hamming decision epilogue — integer distances, zero slack."""
+    eps_i = jnp.int32(int(eps))
+    radr = rad.astype(jnp.int32)[None, :]
+    leafb = (leaf != 0)[None, :]
+    leaf_hit = d <= eps_i
+    incl = d + radr <= eps_i
+    emit = active & jnp.where(leafb, leaf_hit, incl)
+    expand = active & ~leafb & ~emit & (d <= radr + eps_i)
+    return emit, expand
+
+
+# ---------------------------------------------------------------------------
+# L2 variant
+# ---------------------------------------------------------------------------
+
+def _tree_frontier_kernel(
+    q_ref, c_ref, rad_ref, leaf_ref, act_ref, emit_ref, exp_ref, *, eps,
+):
+    act = act_ref[...]
+
+    @pl.when(jnp.any(act != 0))
+    def _compute():
+        active = _unpack_words(act)
+        d2 = _l2_tile_d2(q_ref[...], c_ref[...])            # (TQ, TN)
+        emit, expand = _frontier_masks_l2(
+            d2, rad_ref[...], leaf_ref[...], active, eps)
+        emit_ref[...] = _pack_words(emit)
+        exp_ref[...] = _pack_words(expand)
+
+    @pl.when(~jnp.any(act != 0))
+    def _skip():
+        emit_ref[...] = jnp.zeros_like(emit_ref)
+        exp_ref[...] = jnp.zeros_like(exp_ref)
+
+
+def tree_frontier_pallas(
+    q, c, rad, leaf, act_bits, eps: float, *, tq: int = 256, tn: int = 512,
+    interpret: bool = False,
+):
+    """q (nq, d) queries, c (N, d) level-node coords, rad (N,) fp32 radii,
+    leaf (N,) int32 flags, act_bits (nq, N/32) packed active mask ->
+    (emit_bits, expand_bits) each (nq, N/32) uint32.
+
+    nq % tq == 0, N % tn == 0, tn % 32 == 0 (caller pads; pad columns must
+    be inactive)."""
+    nq, d = q.shape
+    N = c.shape[0]
+    assert nq % tq == 0 and N % tn == 0 and tn % 32 == 0
+    grid = (nq // tq, N // tn)
+    kernel = functools.partial(_tree_frontier_kernel, eps=float(eps))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tn,), lambda i, j: (j,)),
+            pl.BlockSpec((tn,), lambda i, j: (j,)),
+            pl.BlockSpec((tq, tn // 32), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq, tn // 32), lambda i, j: (i, j)),
+            pl.BlockSpec((tq, tn // 32), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, N // 32), jnp.uint32),
+            jax.ShapeDtypeStruct((nq, N // 32), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(q, c, rad, leaf, act_bits)
+
+
+def tree_frontier_ref(q, c, rad, leaf, act_bits, eps: float):
+    """Pure-jnp oracle (same fp32 BLAS3 expansion as the kernel)."""
+    active = _unpack_words(act_bits)
+    x = q.astype(jnp.float32)
+    y = c.astype(jnp.float32)
+    d2 = (jnp.sum(x * x, 1)[:, None] + jnp.sum(y * y, 1)[None, :]
+          - 2.0 * x @ y.T)
+    emit, expand = _frontier_masks_l2(d2, rad, leaf, active, eps)
+    return _pack_words(emit), _pack_words(expand)
+
+
+# ---------------------------------------------------------------------------
+# Hamming variant (packed uint32 rows)
+# ---------------------------------------------------------------------------
+
+def _tree_frontier_hamming_kernel(
+    q_ref, c_ref, rad_ref, leaf_ref, act_ref, emit_ref, exp_ref, *,
+    eps: int, wchunk: int,
+):
+    act = act_ref[...]
+
+    @pl.when(jnp.any(act != 0))
+    def _compute():
+        active = _unpack_words(act)
+        d = _hamming_tile_d(q_ref[...], c_ref[...], wchunk)  # (TQ, TN)
+        emit, expand = _frontier_masks_hamming(
+            d, rad_ref[...], leaf_ref[...], active, eps)
+        emit_ref[...] = _pack_words(emit)
+        exp_ref[...] = _pack_words(expand)
+
+    @pl.when(~jnp.any(act != 0))
+    def _skip():
+        emit_ref[...] = jnp.zeros_like(emit_ref)
+        exp_ref[...] = jnp.zeros_like(exp_ref)
+
+
+def tree_frontier_hamming_pallas(
+    q, c, rad, leaf, act_bits, eps: float, *, tq: int = 128, tn: int = 256,
+    wchunk: int = 8, interpret: bool = False,
+):
+    """Hamming frontier tile over packed uint32 word rows; same tiling
+    contract as the L2 variant, exact integer thresholds."""
+    nq, w = q.shape
+    N = c.shape[0]
+    assert nq % tq == 0 and N % tn == 0 and tn % 32 == 0 and w % wchunk == 0
+    grid = (nq // tq, N // tn)
+    kernel = functools.partial(
+        _tree_frontier_hamming_kernel, eps=int(eps), wchunk=wchunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, w), lambda i, j: (j, 0)),
+            pl.BlockSpec((tn,), lambda i, j: (j,)),
+            pl.BlockSpec((tn,), lambda i, j: (j,)),
+            pl.BlockSpec((tq, tn // 32), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq, tn // 32), lambda i, j: (i, j)),
+            pl.BlockSpec((tq, tn // 32), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, N // 32), jnp.uint32),
+            jax.ShapeDtypeStruct((nq, N // 32), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(q, c, rad, leaf, act_bits)
+
+
+def tree_frontier_hamming_ref(q, c, rad, leaf, act_bits, eps: float):
+    """Pure-jnp oracle (exact integer distances)."""
+    active = _unpack_words(act_bits)
+    xor = jnp.bitwise_xor(q[:, None, :], c[None, :, :])
+    d = jnp.sum(jax.lax.population_count(xor).astype(jnp.int32), axis=-1)
+    emit, expand = _frontier_masks_hamming(d, rad, leaf, active, eps)
+    return _pack_words(emit), _pack_words(expand)

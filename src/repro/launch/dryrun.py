@@ -4,15 +4,15 @@ os.environ["XLA_FLAGS"] = (
     + os.environ.get("REPRO_EXTRA_XLA_FLAGS", ""))
 # ^ MUST precede every other import (jax locks device count on first init).
 
-"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell on the
-production mesh (16×16 single-pod / 2×16×16 multi-pod) with ShapeDtypeStruct
-inputs — no allocation. Records memory_analysis, cost_analysis and the HLO
-roofline terms to results/dryrun/<cell>.json (cached; re-runs skip).
+"""Production-mesh dry-run for the paper's ε-NNG workloads: lower + compile
+every (NNG config × mesh) cell on the flattened device ring of the
+production topology (256 chips single-pod / 512 multi-pod) with
+ShapeDtypeStruct inputs — no allocation. Records memory_analysis and the
+HLO roofline terms to results/dryrun/<cell>.json (cached; re-runs skip).
 
 Usage:
-  python -m repro.launch.dryrun                      # all cells, both meshes
-  python -m repro.launch.dryrun --arch glm4-9b --shape train_4k --mesh pod1
-  python -m repro.launch.dryrun --nng                # paper's NNG workloads
+  python -m repro.launch.dryrun                      # all NNG cells
+  python -m repro.launch.dryrun --arch nng-sift-1m --mesh pod1
 """
 import argparse
 import json
@@ -40,106 +40,12 @@ def _mem_analysis(compiled):
         return {"error": str(e)}
 
 
-def _cost_analysis(compiled):
-    try:
-        ca = compiled.cost_analysis()
-        if isinstance(ca, list):
-            ca = ca[0]
-        return {k: float(v) for k, v in ca.items()
-                if isinstance(v, (int, float)) and (
-                    "flops" in k or "bytes accessed" == k or "utilization" in k)}
-    except Exception as e:
-        return {"error": str(e)}
-
-
-def run_cell(arch: str, shape: str, mesh_name: str, out_dir: str,
-             force: bool = False) -> dict:
-    from repro.launch.mesh import make_production_mesh
-    from repro.launch.specs import input_specs
-    from repro.models import decode_step, get_config, prefill
-    from repro.roofline import analyze_hlo, model_flops, roofline_terms
-    from repro.train import TrainConfig, make_train_step
-
-    path = _result_path(out_dir, arch, shape, mesh_name)
-    if os.path.exists(path) and not force:
-        with open(path) as f:
-            return json.load(f)
-
-    cfg = get_config(arch)
-    if cfg.family == "moe" and os.environ.get("REPRO_EP_PAD", "1") == "1":
-        from dataclasses import replace
-        cfg = replace(cfg, expert_pad_to=16)   # EP over the 16-way model axis
-    from repro.configs import SHAPES
-    if shape == "long_500k" and not cfg.subquadratic:
-        res = {"arch": arch, "shape": shape, "mesh": mesh_name,
-               "status": "SKIP(full-attn)"}
-        _write(path, res)
-        return res
-
-    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
-    chips = mesh.size
-    t0 = time.time()
-    try:
-        from repro.sharding import set_activation_mesh
-        set_activation_mesh(mesh)
-        kind, specs, shardings = input_specs(arch, shape, mesh)
-        with mesh:
-            if kind == "train":
-                # microbatching sized so per-device remat-saved activations
-                # fit HBM (4 microbatches -> ~5 GiB saves for the 40L/4k case)
-                mb = int(os.environ.get("REPRO_MICROBATCHES", "4"))
-                step = make_train_step(cfg, TrainConfig(microbatches=mb))
-                fn = jax.jit(step, in_shardings=shardings,
-                             out_shardings=(shardings[0], shardings[1], None),
-                             donate_argnums=(0, 1))
-            elif kind == "prefill":
-                def pf(params, cache, batch):
-                    return prefill(params, cfg, cache, batch)
-                fn = jax.jit(pf, in_shardings=shardings,
-                             out_shardings=(None, shardings[1]),
-                             donate_argnums=(1,))
-            else:
-                def dc(params, cache, tok, idx):
-                    return decode_step(params, cfg, cache, tok, idx)
-                fn = jax.jit(dc, in_shardings=shardings,
-                             out_shardings=(None, shardings[1]),
-                             donate_argnums=(1,))
-            lowered = fn.lower(*specs)
-            compiled = lowered.compile()
-        hlo = compiled.as_text()
-        stats = analyze_hlo(hlo)
-        terms = roofline_terms(stats, chips)
-        sh = SHAPES[shape]
-        mf = model_flops(cfg, sh["seq_len"], sh["global_batch"], kind)
-        res = {
-            "arch": arch, "shape": shape, "mesh": mesh_name, "kind": kind,
-            "status": "OK", "chips": chips,
-            "compile_s": round(time.time() - t0, 1),
-            "memory": _mem_analysis(compiled),
-            "cost_analysis": _cost_analysis(compiled),
-            "roofline": terms,
-            "model_flops_global": mf,
-            "model_flops_per_chip": mf / chips,
-            "useful_flops_frac": (mf / chips) / max(terms["flops"], 1.0),
-            "unknown_trip_counts": stats.unknown_trip_counts,
-        }
-    except Exception as e:
-        res = {"arch": arch, "shape": shape, "mesh": mesh_name,
-               "status": "FAIL", "error": f"{type(e).__name__}: {e}",
-               "traceback": traceback.format_exc()[-2000:]}
-    finally:
-        from repro.sharding import set_activation_mesh
-        set_activation_mesh(None)
-    _write(path, res)
-    return res
-
-
 def run_nng_cell(name: str, mesh_name: str, out_dir: str,
                  force: bool = False) -> dict:
     """Dry-run the distributed ε-NNG step itself (the paper's workload)."""
     from repro.configs.paper_nng import NNG_CONFIGS
-    from repro.core.distributed import (LandmarkPlan, landmark_nng,
-                                        plan_landmark, systolic_nng)
+    from repro.core.distributed import (landmark_nng, plan_landmark,
+                                        systolic_nng)
     from repro.launch.mesh import make_nng_production_mesh
     from repro.roofline import analyze_hlo, roofline_terms
 
@@ -197,41 +103,18 @@ def _write(path, res):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
-    ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", default=None, choices=[None, "pod1", "pod2"])
-    ap.add_argument("--nng", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
 
+    from repro.configs.paper_nng import NNG_CONFIGS
     meshes = [args.mesh] if args.mesh else ["pod1", "pod2"]
-    if args.nng:
-        from repro.configs.paper_nng import NNG_CONFIGS
-        names = [args.arch] if args.arch else list(NNG_CONFIGS)
-        for name in names:
-            for m in meshes:
-                r = run_nng_cell(name, m, args.out, args.force)
-                print(f"{name:16s} nng {m}: {r['status']}", flush=True)
-        return
-
-    from repro.launch.specs import arch_shape_cells
-    cells = arch_shape_cells()
-    for arch, shape, skip in cells:
-        if args.arch and arch != args.arch:
-            continue
-        if args.shape and shape != args.shape:
-            continue
+    names = [args.arch] if args.arch else list(NNG_CONFIGS)
+    for name in names:
         for m in meshes:
-            r = run_cell(arch, shape, m, args.out, args.force)
-            extra = ""
-            if r["status"] == "OK":
-                rf = r["roofline"]
-                extra = (f" bottleneck={rf['bottleneck']}"
-                         f" t=({rf['t_compute_s']:.4f},"
-                         f"{rf['t_memory_s']:.4f},{rf['t_collective_s']:.4f})s"
-                         f" compile={r['compile_s']}s")
-            print(f"{arch:22s} {shape:12s} {m}: {r['status']}{extra}",
-                  flush=True)
+            r = run_nng_cell(name, m, args.out, args.force)
+            print(f"{name:16s} nng {m}: {r['status']}", flush=True)
 
 
 if __name__ == "__main__":

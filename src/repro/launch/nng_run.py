@@ -23,17 +23,25 @@ SEN = 2**31 - 1
 
 
 def run_systolic(pts, eps, mesh, *, metric="euclidean", k_cap=64,
-                 prune=True, max_grows=6):
+                 prune=True, max_grows=6, traversal="tiles", forest=None):
     """Systolic engine + re-plan loop: on overflow, grow k_cap to the exact
     max neighbor count (cnt is always exact) and re-run. Returns
-    (nbrs, cnt, tiles_skipped, k_cap) with overflow guaranteed False."""
+    (nbrs, cnt, counters, k_cap) with overflow guaranteed False;
+    ``counters`` = (tiles_skipped, dists_evaluated, nodes_pruned) per-rank
+    arrays. ``traversal="tree"`` builds per-block cover-tree forests once
+    and traverses them on device (the re-plan loop reuses them)."""
     from repro.core.distributed import systolic_nng
+    if traversal == "tree" and forest is None:
+        from repro.core.flat_tree import (build_block_forests,
+                                          stack_device_forests)
+        forest = stack_device_forests(
+            build_block_forests(np.asarray(pts), mesh.size, metric))
     for _ in range(max_grows):
-        nbrs, cnt, ovf, skipped = systolic_nng(
+        nbrs, cnt, ovf, skipped, dists, pruned = systolic_nng(
             jnp.asarray(pts), float(eps), mesh, metric=metric,
-            k_cap=k_cap, prune=prune)
+            k_cap=k_cap, prune=prune, traversal=traversal, forest=forest)
         if not bool(np.asarray(ovf).any()):
-            return nbrs, cnt, skipped, k_cap
+            return nbrs, cnt, (skipped, dists, pruned), k_cap
         k_cap = max(2 * k_cap, int(np.asarray(cnt).max()))
     raise RuntimeError(f"systolic overflow persists at k_cap={k_cap}")
 
@@ -51,17 +59,30 @@ def grow_plan(plan):
 
 
 def run_landmark(pts, eps, centers, f, mesh, plan, *, metric="euclidean",
-                 max_grows=6):
+                 max_grows=6, traversal="tiles", cell=None, forest=None):
     """Landmark engine + re-plan loop: on overflow, double all plan
     capacities and re-run. Returns (outputs, plan) with the overflow flag
     (outputs[6]) guaranteed False; outputs[7] / outputs[8] are the
     per-rank tiles_skipped / tiles_scheduled counters of the grouped-tile
-    fast path (from the final, non-overflowing run)."""
+    fast path and outputs[9] / outputs[10] the dists_evaluated /
+    nodes_pruned traversal counters (from the final, non-overflowing run).
+    ``traversal="tree"`` builds the per-cell forests once from ``cell``
+    (the Voronoi assignment matching ``centers``/``f``); re-plans reuse
+    them — capacities don't change the trees."""
     from repro.core.distributed import landmark_nng
+    if traversal == "tree":
+        assert cell is not None, "traversal='tree' needs the cell assignment"
+        if forest is None:
+            from repro.core.flat_tree import (build_cell_forests,
+                                              stack_device_forests)
+            forest = stack_device_forests(
+                build_cell_forests(np.asarray(pts), cell, f, mesh.size,
+                                   metric))
     for _ in range(max_grows):
         out = landmark_nng(
             jnp.asarray(pts), float(eps), jnp.asarray(centers),
-            jnp.asarray(f, np.int32), mesh, plan, metric=metric)
+            jnp.asarray(f, np.int32), mesh, plan, metric=metric,
+            traversal=traversal, forest=forest, cell=cell)
         if not bool(np.asarray(out[6]).any()):
             return out, plan
         plan = grow_plan(plan)
@@ -91,6 +112,12 @@ def main(argv=None):
     ap.add_argument("--verify", action="store_true")
     ap.add_argument("--no-prune", action="store_true",
                     help="disable block-summary tile pruning (systolic)")
+    ap.add_argument("--traversal", default="tiles", choices=["tiles", "tree"],
+                    help="per-tile evaluation: dense bitmask tiles or "
+                         "device-resident cover-tree traversal")
+    ap.add_argument("--planner", default="device", choices=["device", "host"],
+                    help="landmark capacity planning: one shard_map "
+                         "counting pass (exact) or the host numpy pass")
     args = ap.parse_args(argv)
 
     from repro.core.distributed import LandmarkPlan
@@ -109,45 +136,60 @@ def main(argv=None):
 
     t0 = time.time()
     if args.algo == "systolic":
-        nbrs, cnt, skipped, k_cap = run_systolic(
+        nbrs, cnt, counters, k_cap = run_systolic(
             pts, args.eps, mesh, metric=args.metric, k_cap=args.k_cap,
-            prune=not args.no_prune)
+            prune=not args.no_prune, traversal=args.traversal)
         jax.block_until_ready(cnt)
         elapsed = time.time() - t0
         src, dst = edges_from_neighbor_lists(np.arange(n), nbrs)
         overflow = False
+        skipped, dists, pruned = counters
         nskip = int(np.asarray(skipped).sum())
-        print(f"tiles_skipped={nskip} (final k_cap={k_cap})")
+        print(f"tiles_skipped={nskip} dists_evaluated="
+              f"{int(np.asarray(dists).sum())} nodes_pruned="
+              f"{int(np.asarray(pruned).sum())} (final k_cap={k_cap}, "
+              f"traversal={args.traversal})")
     else:
         met = get_host_metric(args.metric)
         m = max(2 * nranks, 32)
         centers_idx = select_centers(n, m, rng)
         cpts = pts[centers_idx]
-        dmat = np.asarray(met.true(met.cdist(pts, cpts)))
-        cell = np.argmin(dmat, axis=1)
+        cell = np.argmin(np.asarray(met.cdist(pts, cpts)), axis=1)
         sizes = np.bincount(cell, minlength=m)
         f = lpt_assignment(sizes, nranks)
-        # planner pass: exact per-(src,dst) capacities on the host.
-        # capacities are per rank PAIR (the all_to_all buffer is
-        # (nranks, cap, ...)): count points/ghost-copies moving src->dst.
-        from repro.core.landmark import ghost_membership
-        d_pC = dmat[np.arange(n), cell]
-        gmask = ghost_membership(dmat, cell, d_pC, args.eps)
-        g_per_pt = int(gmask.sum(axis=1).max())
-        src_rank = np.repeat(np.arange(nranks), n // nranks)
-        coal = np.zeros((nranks, nranks), np.int64)
-        np.add.at(coal, (src_rank, f[cell]), 1)
-        gsrc = np.repeat(src_rank, m).reshape(n, m)[gmask]
-        gdst = np.broadcast_to(f[None, :], (n, m))[gmask]
-        gcnt = np.zeros((nranks, nranks), np.int64)
-        np.add.at(gcnt, (gsrc, gdst), 1)
-        plan = LandmarkPlan(
-            m_centers=m, cap_coal=int(coal.max()) + 8,
-            cap_ghost=int(gcnt.max()) + 8,
-            g_per_pt=max(g_per_pt, 1),
-            k_cap=args.k_cap)
-        (Wids, wn, wc, Gids, gn, gc, ovf, tskip, tsched), plan = run_landmark(
-            pts, args.eps, cpts, f, mesh, plan, metric=args.metric)
+        if args.planner == "device":
+            # ONE shard_map counting pass: exact per-(src,dst) coalesce and
+            # slacked-Lemma-1 ghost capacities (the same tests the engine
+            # applies), so the common case never re-plans
+            from repro.core.distributed import plan_landmark_device
+            plan = plan_landmark_device(
+                pts, cpts, np.asarray(f, np.int32), args.eps, mesh,
+                metric=args.metric, k_cap=args.k_cap)
+        else:
+            # host numpy pass (float64 ghost bound — may undercount the
+            # engine's slacked test; the overflow grow loop covers it)
+            from repro.core.landmark import ghost_membership
+            dmat = np.asarray(met.true(met.cdist(pts, cpts)))
+            d_pC = dmat[np.arange(n), cell]
+            gmask = ghost_membership(dmat, cell, d_pC, args.eps)
+            g_per_pt = int(gmask.sum(axis=1).max())
+            src_rank = np.repeat(np.arange(nranks), n // nranks)
+            coal = np.zeros((nranks, nranks), np.int64)
+            np.add.at(coal, (src_rank, f[cell]), 1)
+            gsrc = np.repeat(src_rank, m).reshape(n, m)[gmask]
+            gdst = np.broadcast_to(f[None, :], (n, m))[gmask]
+            gcnt = np.zeros((nranks, nranks), np.int64)
+            np.add.at(gcnt, (gsrc, gdst), 1)
+            plan = LandmarkPlan(
+                m_centers=m, cap_coal=int(coal.max()) + 8,
+                cap_ghost=int(gcnt.max()) + 8,
+                g_per_pt=max(g_per_pt, 1),
+                k_cap=args.k_cap)
+        out, plan = run_landmark(
+            pts, args.eps, cpts, f, mesh, plan, metric=args.metric,
+            traversal=args.traversal, cell=cell)
+        (Wids, wn, wc, Gids, gn, gc, ovf, tskip, tsched, dists,
+         pruned) = out
         jax.block_until_ready(wc)
         elapsed = time.time() - t0
         s1, d1 = edges_from_neighbor_lists(Wids, wn)
@@ -156,7 +198,10 @@ def main(argv=None):
         overflow = False
         nskip = int(np.asarray(tskip).sum())
         nsched = int(np.asarray(tsched).sum())
-        print(f"grouped tiles skipped={nskip}/{nsched} (plan={plan})")
+        print(f"grouped tiles skipped={nskip}/{nsched} dists_evaluated="
+              f"{int(np.asarray(dists).sum())} nodes_pruned="
+              f"{int(np.asarray(pruned).sum())} "
+              f"(traversal={args.traversal}, plan={plan})")
 
     from repro.core.graph import EpsGraph
     g = EpsGraph(n, src, dst)

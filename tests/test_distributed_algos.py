@@ -123,15 +123,15 @@ _keep = _ii < _jj
 gb = EpsGraph(n, _ii[_keep], _jj[_keep])
 mesh = make_nng_mesh(8)
 
-nbrs, cnt, ovf, skipped = systolic_nng(jnp.asarray(pts), float(eps), mesh,
-                                       k_cap=512)
+nbrs, cnt, ovf, skipped, dists, pruned = systolic_nng(
+    jnp.asarray(pts), float(eps), mesh, k_cap=512)
 assert not bool(np.asarray(ovf).any())
 nbrs = np.asarray(nbrs)
 ii, kk = np.nonzero(nbrs != SEN)
 assert EpsGraph(n, ii, nbrs[ii, kk]) == gb, "systolic mismatch"
 
 # overflow flag fires with tiny k_cap
-_, cnt2, ovf2, _ = systolic_nng(jnp.asarray(pts), eps, mesh, k_cap=1)
+_, cnt2, ovf2, *_rest = systolic_nng(jnp.asarray(pts), eps, mesh, k_cap=1)
 assert bool(np.asarray(ovf2).any()) == bool((np.asarray(cnt2) > 1).any())
 
 m = 24
@@ -143,7 +143,8 @@ sizes = np.bincount(cell, minlength=m)
 f = lpt_assignment(sizes, 8)
 plan = LandmarkPlan(m_centers=m, cap_coal=int(sizes.max())+32, cap_ghost=2048,
                     g_per_pt=m, k_cap=512)
-Wids, wn, wc, Gids, gn, gc, ovf, tskip, tsched = landmark_nng(
+(Wids, wn, wc, Gids, gn, gc, ovf, tskip, tsched, ldists,
+ lpruned) = landmark_nng(
     jnp.asarray(pts), eps, jnp.asarray(cpts), jnp.asarray(f, np.int32),
     mesh, plan)
 assert not bool(np.asarray(ovf).any())
@@ -161,8 +162,8 @@ assert EpsGraph(n, np.concatenate(src), np.concatenate(dst)) == gb, "landmark"
 hpts = synthetic_pointset(1024, 8, "hamming", seed=4)
 heps = 40
 hgb = brute_force_graph(hpts, heps, "hamming")
-nbrs, cnt, ovf, skipped = systolic_nng(jnp.asarray(hpts), heps, mesh,
-                                       metric="hamming", k_cap=256)
+nbrs, cnt, ovf, skipped, hdists, hpruned = systolic_nng(
+    jnp.asarray(hpts), heps, mesh, metric="hamming", k_cap=256)
 nbrs = np.asarray(nbrs)
 ii, kk = np.nonzero(nbrs != SEN)
 assert EpsGraph(1024, ii, nbrs[ii, kk]) == hgb, "hamming systolic"
@@ -218,7 +219,8 @@ n = len(pts)
 eps = 1.0
 mesh = make_nng_mesh(8)
 
-nbrs, cnt, ovf, skipped = systolic_nng(jnp.asarray(pts), eps, mesh, k_cap=512)
+nbrs, cnt, ovf, skipped, dists, pruned = systolic_nng(
+    jnp.asarray(pts), eps, mesh, k_cap=512)
 assert not bool(np.asarray(ovf).any())
 nskip = int(np.asarray(skipped).sum())
 assert nskip > 0, "clustered blocks must prune tiles"
@@ -231,8 +233,8 @@ assert g == gh, "device pruned graph != host systolic"
 assert stats.tiles_skipped > 0
 
 # pruning off -> same edges, zero skip counter
-nbrs2, _, ovf2, skipped2 = systolic_nng(jnp.asarray(pts), eps, mesh,
-                                        k_cap=512, prune=False)
+nbrs2, _, ovf2, skipped2, dists2, _p2 = systolic_nng(
+    jnp.asarray(pts), eps, mesh, k_cap=512, prune=False)
 assert not bool(np.asarray(ovf2).any())
 assert int(np.asarray(skipped2).sum()) == 0
 ii2, kk2 = np.nonzero(np.asarray(nbrs2) != SEN)
@@ -248,8 +250,8 @@ bit = rng.integers(0, 32, size=(nh, 3)).astype(np.uint32)
 for t in range(3):  # flip <=3 bits per point: intra<=6, inter~128
     hpts[np.arange(nh), word[:, t]] ^= (np.uint32(1) << bit[:, t])
 heps = 12
-hnbrs, hcnt, hovf, hskip = systolic_nng(jnp.asarray(hpts), heps, mesh,
-                                        metric="hamming", k_cap=256)
+hnbrs, hcnt, hovf, hskip, _hd, _hp = systolic_nng(
+    jnp.asarray(hpts), heps, mesh, metric="hamming", k_cap=256)
 assert not bool(np.asarray(hovf).any())
 assert int(np.asarray(hskip).sum()) > 0, "hamming blocks must prune"
 hi, hk = np.nonzero(np.asarray(hnbrs) != SEN)
@@ -288,9 +290,9 @@ gb = EpsGraph(n, _ii[_keep], _jj[_keep])
 mesh = make_nng_mesh(8)
 
 # k_cap=1 must overflow, then the driver grows it to the exact max count
-_, cnt1, ovf1, _ = systolic_nng(jnp.asarray(pts), eps, mesh, k_cap=1)
+_, cnt1, ovf1, *_rest = systolic_nng(jnp.asarray(pts), eps, mesh, k_cap=1)
 assert bool(np.asarray(ovf1).any()), "k_cap=1 must overflow on this input"
-nbrs, cnt, skipped, k_final = run_systolic(pts, eps, mesh, k_cap=1)
+nbrs, cnt, counters, k_final = run_systolic(pts, eps, mesh, k_cap=1)
 assert k_final >= int(np.asarray(cnt).max())
 ii, kk = np.nonzero(np.asarray(nbrs) != SEN)
 assert EpsGraph(n, ii, np.asarray(nbrs)[ii, kk]) == gb, "replanned systolic"
@@ -304,8 +306,8 @@ cpts = pts[cidx]
 cell = np.argmin(met.cdist(pts, cpts), axis=1)
 f = lpt_assignment(np.bincount(cell, minlength=m), 8)
 tiny = LandmarkPlan(m_centers=m, cap_coal=8, cap_ghost=8, g_per_pt=1, k_cap=2)
-(Wids, wn, wc, Gids, gn, gc, ovf, tskip, tsched), plan = run_landmark(
-    pts, eps, cpts, f, mesh, tiny, max_grows=10)
+(Wids, wn, wc, Gids, gn, gc, ovf, tskip, tsched, ldists,
+ lpruned), plan = run_landmark(pts, eps, cpts, f, mesh, tiny, max_grows=10)
 assert not bool(np.asarray(ovf).any())
 assert plan.k_cap > 2 and plan.cap_coal > 8, "plan must have grown"
 s1, d1 = edges_from_neighbor_lists(Wids, wn)

@@ -1,94 +1,25 @@
-"""Per-arch smoke tests (reduced configs, CPU): one forward/train step with
-shape + finiteness assertions, serving consistency, SSD scan properties."""
+"""Layer-math property tests for the retained model substrate.
+
+The seed repo's multi-LLM architecture registry (and its per-arch smoke
+grid) was pruned in PR 4; the reusable layer machinery (SSD scan, blockwise
+attention, MoE block) stays tested against naive references with inline
+configs."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from dataclasses import replace
 
-from repro.models import (decode_step, forward, get_config, init_cache,
-                          init_params, list_archs, loss_fn, prefill)
-from repro.optim import AdamWConfig, adamw_init
-from repro.train import TrainConfig, make_train_step
+from repro.models import init_params
+from repro.models.config import ModelConfig
 
-ARCHS = list_archs()
 KEY = jax.random.PRNGKey(0)
 
 
-def make_batch(cfg, B=2, S=64, seed=0):
-    rng = np.random.default_rng(seed)
-    if cfg.family == "audio":
-        toks = rng.integers(0, cfg.vocab, (B, S, cfg.n_codebooks))
-    else:
-        toks = rng.integers(0, cfg.vocab, (B, S))
-    batch = {"tokens": toks.astype(np.int32)}
-    if cfg.frontend == "vision":
-        batch["patch_embeds"] = rng.normal(
-            size=(B, cfg.n_prefix, cfg.frontend_dim)).astype(np.float32) * 0.1
-    return batch
-
-
-@pytest.mark.parametrize("arch", ARCHS)
-def test_smoke_forward_and_train_step(arch):
-    cfg = get_config(arch).smoke()
-    params = init_params(cfg, KEY)
-    batch = make_batch(cfg)
-    logits, aux = jax.jit(lambda p, b: forward(p, cfg, b))(params, batch)
-    if cfg.family == "audio":
-        assert logits.shape == (2, 64, cfg.n_codebooks, cfg.vocab)
-    else:
-        assert logits.shape == (2, 64, cfg.vocab)
-    assert np.isfinite(np.asarray(logits)).all(), arch
-
-    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3, total_steps=10))
-    step = jax.jit(make_train_step(cfg, tcfg))
-    opt = adamw_init(params)
-    p2, o2, m = step(params, opt, batch)
-    assert np.isfinite(float(m["loss"])), arch
-    assert int(o2["step"]) == 1
-    # params actually changed
-    changed = any(
-        not np.allclose(np.asarray(a), np.asarray(b))
-        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
-    assert changed, arch
-
-
-@pytest.mark.parametrize("arch", ARCHS)
-def test_smoke_decode_step(arch):
-    cfg = get_config(arch).smoke()
-    params = init_params(cfg, KEY)
-    cache = init_cache(cfg, 2, 16)
-    tok = make_batch(cfg, S=1)["tokens"]
-    lg, c2 = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t, 0))(
-        params, cache, tok)
-    assert np.isfinite(np.asarray(lg)).all(), arch
-
-
-@pytest.mark.parametrize("arch", ["glm4-9b", "zamba2-1.2b", "xlstm-1.3b",
-                                  "granite-moe-3b-a800m", "musicgen-large",
-                                  "internvl2-26b"])
-def test_serving_consistency(arch):
-    """prefill + incremental decode == full forward (capacity-free MoE)."""
-    cfg = get_config(arch).smoke()
-    if cfg.family == "moe":
-        cfg = replace(cfg, moe_capacity=float(cfg.n_experts))
-    params = init_params(cfg, KEY)
-    B, S, TAIL = 2, 32, 4
-    batch = make_batch(cfg, B, S, seed=1)
-    full, _ = forward(params, cfg, batch)
-    cache = init_cache(cfg, B, S)
-    pre = dict(batch)
-    pre["tokens"] = batch["tokens"][:, : S - TAIL]
-    pl, cache = prefill(params, cfg, cache, pre)
-    outs = [np.asarray(pl[:, -1:])]
-    for t in range(S - TAIL, S - 1):
-        lg, cache = decode_step(params, cfg, cache,
-                                batch["tokens"][:, t : t + 1], t)
-        outs.append(np.asarray(lg))
-    inc = np.concatenate(outs, axis=1)
-    want = np.asarray(full)[:, S - TAIL - 1 : S - 1]
-    rel = np.abs(want - inc).max() / (np.abs(want).max() + 1e-9)
-    assert rel < 2e-3, (arch, rel)
+def _moe_cfg():
+    return ModelConfig(
+        name="moe-inline-smoke", family="moe", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+        n_experts=4, top_k=2, moe_capacity=4.0, attn_q_chunk=32,
+        attn_kv_chunk=32, dtype="float32", remat=False)
 
 
 def test_ssd_scan_equals_naive_recurrence():
@@ -135,8 +66,7 @@ def test_blockwise_attention_equals_full():
 def test_moe_dropless_matches_dense_sum():
     """With capacity >= all tokens, MoE output = gate-weighted expert sum."""
     from repro.models.layers import moe_block
-    cfg = get_config("granite-moe-3b-a800m").smoke()
-    cfg = replace(cfg, moe_capacity=float(cfg.n_experts))
+    cfg = _moe_cfg()
     params = init_params(cfg, KEY)
     lp = jax.tree.map(lambda x: x[0], params["layers"]["moe"])
     rng = np.random.default_rng(2)

@@ -22,27 +22,20 @@ def test_quickstart_flow():
     assert g_tree.avg_degree > 0
 
 
-def test_train_driver_smoke(tmp_path):
-    from repro.launch.train import main
-    losses = main(["--arch", "musicgen-large", "--smoke", "--steps", "25",
-                   "--batch", "4", "--seq", "32", "--lr", "3e-3",
-                   "--ckpt-dir", str(tmp_path / "ck"),
-                   "--ckpt-every", "10"])
-    assert len(losses) == 25
-    assert losses[-1] < losses[0]
-
-
-def test_serve_driver_smoke():
-    from repro.launch.serve import main
-    gen = main(["--arch", "qwen2-7b", "--smoke", "--batch", "2",
-                "--prompt-len", "16", "--gen", "8"])
-    assert gen.shape[0] == 2 and np.issubdtype(gen.dtype, np.integer)
-
-
 def test_nng_driver_verified():
     from repro.launch.nng_run import main
     g = main(["--n", "1024", "--dim", "6", "--eps", "1.0",
               "--algo", "landmark", "--verify", "--k-cap", "512"])
+    assert g.num_edges > 0
+
+
+def test_nng_driver_tree_traversal_verified():
+    """The driver's --traversal tree path (host-planner flavor) must also
+    verify against brute force end to end."""
+    from repro.launch.nng_run import main
+    g = main(["--n", "768", "--dim", "6", "--eps", "1.0",
+              "--algo", "landmark", "--verify", "--k-cap", "512",
+              "--traversal", "tree", "--planner", "host"])
     assert g.num_edges > 0
 
 

@@ -1,52 +1,27 @@
-"""Training loop, optimizer, checkpointing and fault-tolerance tests."""
+"""Optimizer, checkpointing, fault-tolerance and data-pipeline tests.
+
+(The seed repo's LLM train-step tests left with the pruned ``repro.train``
+package in PR 4; the retained substrate — AdamW, checkpoint store, FT loop,
+straggler schedule, deterministic pipeline — keeps standalone coverage.)"""
 import os
 
 import jax
 import numpy as np
-import pytest
 
 from repro.checkpoint import (AsyncCheckpointer, latest_step,
                               restore_checkpoint, save_checkpoint)
 from repro.data import synthetic_lm_batches
 from repro.ft import FTConfig, resilient_loop, straggler_tile_schedule
 from repro.ft.straggler import naive_makespan, schedule_makespan
-from repro.models import get_config, init_params
+from repro.models.config import ModelConfig
 from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
-from repro.train import TrainConfig, make_train_step
-
-KEY = jax.random.PRNGKey(0)
 
 
-def test_loss_decreases_quickstart():
-    cfg = get_config("granite-8b").smoke()
-    params = init_params(cfg, KEY)
-    tcfg = TrainConfig(optimizer=AdamWConfig(
-        lr=3e-3, total_steps=60, warmup_steps=5))
-    step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))
-    opt = adamw_init(params)
-    losses = []
-    for s, batch in synthetic_lm_batches(cfg, batch=8, seq=64):
-        params, opt, m = step(params, opt, batch)
-        losses.append(float(m["loss"]))
-        if s >= 59:
-            break
-    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
-
-
-def test_microbatch_equivalence():
-    """k microbatches must produce the same update as one big batch."""
-    cfg = get_config("granite-8b").smoke()
-    params = init_params(cfg, KEY)
-    opt = adamw_init(params)
-    _, batch = next(iter(synthetic_lm_batches(cfg, batch=8, seq=32)))
-    p1, _, m1 = jax.jit(make_train_step(cfg, TrainConfig(microbatches=1)))(
-        params, opt, batch)
-    p4, _, m4 = jax.jit(make_train_step(cfg, TrainConfig(microbatches=4)))(
-        params, opt, batch)
-    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-4
-    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                   atol=5e-5, rtol=5e-4)
+def _tiny_cfg():
+    return ModelConfig(
+        name="tiny-inline", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+        dtype="float32", remat=False)
 
 
 def test_adamw_and_schedule():
@@ -129,7 +104,7 @@ def test_straggler_schedule_better_and_complete():
 
 
 def test_data_pipeline_determinism():
-    cfg = get_config("granite-8b").smoke()
+    cfg = _tiny_cfg()
     a = [b for _, b in zip(range(3), synthetic_lm_batches(cfg, batch=4, seq=16, seed=5))]
     b = [b for _, b in zip(range(3), synthetic_lm_batches(cfg, batch=4, seq=16, seed=5))]
     for (sa, ba), (sb, bb) in zip(a, b):
