@@ -29,6 +29,8 @@ def main(argv=None) -> None:
                     help="run only benches whose name contains this substring")
     ap.add_argument("--landmark-json", default="BENCH_landmark.json",
                     help="output path for the landmark perf JSON")
+    ap.add_argument("--systolic-json", default="BENCH_systolic.json",
+                    help="output path for the systolic perf JSON")
     args = ap.parse_args(argv)
 
     from benchmarks import tables
@@ -41,6 +43,8 @@ def main(argv=None) -> None:
         ("block_pruning", tables.bench_block_pruning),    # systolic skip rates
         ("landmark_device",                               # landmark fast path
          lambda: tables.bench_landmark_device(args.landmark_json)),
+        ("systolic_device",                               # systolic fast path
+         lambda: tables.bench_systolic_device(args.systolic_json)),
         ("distance_kernels", tables.bench_distance_kernels),  # kernel layer
     ]
     selected = [(n, f) for n, f in benches

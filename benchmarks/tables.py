@@ -321,6 +321,72 @@ def bench_landmark_device(json_path: str = "BENCH_landmark.json"):
     return res
 
 
+# -- systolic device engine: perf trajectory (machine-readable) -------------
+def bench_systolic_device(json_path: str = "BENCH_systolic.json"):
+    """Systolic DEVICE engine via the public ``build_nng`` front-end on
+    block-clustered data (the regime where block-summary pruning fires):
+    edges/s, ring comm bytes, tile-skip rate, and both traversal flavors'
+    work counters — the SAME schema as ``BENCH_landmark.json`` so one
+    trend check gates both engines."""
+    import json
+
+    import jax
+
+    from repro.data import blocked_clusters
+    from repro.kernels.ops import pallas_mode
+    from repro.nng import build_nng
+
+    nranks = len(jax.devices())
+    n, dim = 4096, 16
+    pts = blocked_clusters((n // nranks) * nranks, dim, nranks, seed=4)
+    n = len(pts)
+    eps = 1.0
+
+    def timed(traversal):
+        # warm-up absorbs jit/shard_map compile + any k_cap grow; the
+        # second call hits the memoized program and measures steady state
+        build_nng(pts, eps, partition="point", traversal=traversal,
+                  k_cap=512)
+        return build_nng(pts, eps, partition="point", traversal=traversal,
+                         k_cap=512)
+
+    g = timed("tiles")
+    g_tree = timed("tree")
+    assert g_tree == g, "tree vs tiles traversal edge mismatch"
+    st, st_tree = g.stats, g_tree.stats
+    dt, dt_tree = st.elapsed_s, st_tree.elapsed_s
+    res = {
+        "workload": {"name": "blocked-clusters", "n": n, "dim": dim,
+                     "metric": "euclidean", "eps": eps, "nranks": nranks},
+        "pallas_mode": pallas_mode(),
+        "edges": g.num_edges,
+        "elapsed_s": round(dt, 4),
+        "edges_per_s": round(g.num_edges / max(dt, 1e-9), 1),
+        "comm_bytes": {k: int(v) for k, v in st.comm_bytes.items()},
+        "tiles": {"scheduled": int(st.tiles_scheduled),
+                  "skipped": int(st.tiles_skipped),
+                  "skip_rate": round(st.tile_skip_rate, 4)},
+        "traversal": {
+            "tiles": {"elapsed_s": round(dt, 4),
+                      "dists_evaluated": int(st.dists_evaluated)},
+            "tree": {"elapsed_s": round(dt_tree, 4),
+                     "dists_evaluated": int(st_tree.dists_evaluated),
+                     "nodes_pruned": int(st_tree.nodes_pruned),
+                     "dist_reduction_x": round(
+                         st.dists_evaluated
+                         / max(st_tree.dists_evaluated, 1), 2)},
+        },
+        "plan": {"k_cap": g.meta["plan"]},
+    }
+    with open(json_path, "w") as fh:
+        json.dump(res, fh, indent=1)
+    emit(f"systolic-device/ranks={nranks}", dt * 1e6,
+         f"edges_per_s={res['edges_per_s']};skip_rate="
+         f"{res['tiles']['skip_rate']};tree_dist_reduction="
+         f"{res['traversal']['tree']['dist_reduction_x']}x;json={json_path}")
+    return res
+
+
 # -- CI bench trend check ---------------------------------------------------
 
 # (json path, higher-is-better) metrics gated by the trend check
@@ -364,29 +430,36 @@ def _check_main(argv):
     import json
 
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--check", required=True,
-                    help="fresh BENCH_landmark.json to gate")
-    ap.add_argument("--prev", default=None,
-                    help="previous run's JSON (artifact); missing => warn")
+    ap.add_argument("--check", required=True, nargs="+",
+                    help="fresh bench JSON(s) to gate (landmark, systolic)")
+    ap.add_argument("--prev", default=None, nargs="*",
+                    help="previous run's JSON(s), positionally matched to "
+                         "--check; missing files => warn")
     ap.add_argument("--max-regression", type=float, default=2.0)
     args = ap.parse_args(argv)
-    with open(args.check) as fh:
-        new = json.load(fh)
-    if not args.prev or not os.path.exists(args.prev):
-        print(f"trend-check: no previous bench history at {args.prev!r} — "
-              "skipping (first run or artifact expired)")
-        return 0
-    with open(args.prev) as fh:
-        prev = json.load(fh)
-    failures = trend_check(new, prev, args.max_regression)
-    for path, _ in TREND_METRICS:
-        print(f"trend-check: {path}: prev={_json_get(prev, path)} "
-              f"new={_json_get(new, path)}")
-    if failures:
-        print("trend-check FAILED:\n  " + "\n  ".join(failures))
-        return 1
-    print("trend-check OK")
-    return 0
+    prevs = list(args.prev or [])
+    prevs += [None] * (len(args.check) - len(prevs))
+    rc = 0
+    for check_path, prev_path in zip(args.check, prevs):
+        with open(check_path) as fh:
+            new = json.load(fh)
+        if not prev_path or not os.path.exists(prev_path):
+            print(f"trend-check[{check_path}]: no previous bench history at "
+                  f"{prev_path!r} — skipping (first run or artifact expired)")
+            continue
+        with open(prev_path) as fh:
+            prev = json.load(fh)
+        failures = trend_check(new, prev, args.max_regression)
+        for path, _ in TREND_METRICS:
+            print(f"trend-check[{check_path}]: {path}: "
+                  f"prev={_json_get(prev, path)} new={_json_get(new, path)}")
+        if failures:
+            print(f"trend-check[{check_path}] FAILED:\n  "
+                  + "\n  ".join(failures))
+            rc = 1
+        else:
+            print(f"trend-check[{check_path}] OK")
+    return rc
 
 
 if __name__ == "__main__":

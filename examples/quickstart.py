@@ -1,41 +1,106 @@
-"""Quickstart: build an exact fixed-radius near-neighbor graph three ways
-(cover tree, systolic ring, landmark) and verify against brute force.
+"""Quickstart for the public API: ``repro.nng.build_nng`` -> ``NNGraph``.
+
+Builds the exact ε-graph of one point set under three metrics, with both
+partition strategies and both traversal flavors, on 8 (simulated) devices
+— then verifies every result against a brute-force oracle.
+
+Exactness contract (same as the paper's float implementations): the edge
+set is exact with respect to the DECLARED distance function — the fp32
+tile arithmetic on device. We verify bit-identical edges against a brute
+oracle using that arithmetic, and report how many knife-edge pairs differ
+from the float64 ground truth (all within fp32 error of eps; zero for the
+integer Hamming metric).
 
 Run: PYTHONPATH=src python examples/quickstart.py
+(CI runs this as the public-API smoke job.)
 """
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# 8 simulated devices; must be set before jax initializes
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8").strip()
+
 import numpy as np  # noqa: E402
 
 from repro.core.brute import brute_force_graph  # noqa: E402
-from repro.core.covertree import build_covertree  # noqa: E402
 from repro.core.graph import EpsGraph  # noqa: E402
-from repro.core.host_algos import landmark_host, systolic_ring_host  # noqa: E402
+from repro.core.metrics import get_metric  # noqa: E402
+from repro.core.metrics_host import get_host_metric  # noqa: E402
 from repro.data import synthetic_pointset  # noqa: E402
+from repro.nng import build_nng  # noqa: E402
+
+
+def pick_eps(pts, metric, target_degree=24.0):
+    """eps giving roughly the target average degree (sample quantile)."""
+    met = get_host_metric(metric)
+    sample = pts[:1500]
+    d = np.asarray(met.true(met.cdist(sample, sample)))
+    vals = d[np.triu_indices(len(sample), 1)]
+    eps = float(np.quantile(vals, target_degree / max(len(pts) - 1, 1)))
+    return max(1.0, round(eps)) if metric == "hamming" else eps
+
+
+def declared_oracle(pts, eps, metric):
+    """Brute force under the ENGINES' declared distance arithmetic (the
+    device metric's fp32 ``cdist``, fp32 threshold) — the exactness
+    reference. The threshold comparison must stay fp32 too: promoting to
+    float64 flips pairs whose fp32 distance equals the fp32 threshold."""
+    met = get_metric(metric)
+    d = np.asarray(met.cdist(pts, pts), np.float32)
+    if metric == "euclidean":   # canonical threshold: fp32 eps squared IN fp32
+        ceps = np.float32(eps) ** 2
+    else:
+        ceps = np.float32(met.comparable(eps))
+    ii, jj = np.nonzero(d <= ceps)
+    keep = ii < jj
+    return EpsGraph(len(pts), ii[keep], jj[keep])
 
 
 def main():
-    pts = synthetic_pointset(5000, 16, "euclidean", seed=0)
-    eps = 1.0
+    n = 2500        # deliberately NOT divisible by 8: exercises padding
+    for metric in ("euclidean", "manhattan", "hamming"):
+        pts = synthetic_pointset(n, 8, metric, seed=7)
+        eps = pick_eps(pts, metric)
+        oracle = declared_oracle(pts, eps, metric)
+        results = {}
+        for partition in ("point", "spatial"):
+            for traversal in ("tiles", "tree"):
+                g = build_nng(pts, eps, metric=metric, partition=partition,
+                              traversal=traversal, k_cap=256)
+                st = g.stats
+                print(f"{metric:10s} {partition:7s}/{traversal:5s}: {g}  "
+                      f"[{st.elapsed_s:.2f}s, replans={st.replans}, "
+                      f"tiles {st.tiles_skipped:.0f}/{st.tiles_scheduled:.0f} "
+                      f"skipped, {st.dists_evaluated:.0f} dists]")
+                results[(partition, traversal)] = g
 
-    tree = build_covertree(pts)
-    g_tree = EpsGraph(len(pts), *tree.query(pts, eps))
-    print(f"cover tree     : {g_tree}")
+        # every engine/traversal combination: identical, exact edge sets
+        g0 = results[("point", "tiles")]
+        assert all(g == g0 for g in results.values()), metric
+        assert g0 == oracle, f"{metric}: device graph != declared oracle"
+        assert int(g0.row_ptr[-1]) == 2 * oracle.num_edges
 
-    g_sys, st = systolic_ring_host(pts, eps, nranks=8)
-    print(f"systolic (N=8) : {g_sys}  ring bytes={st.comm_bytes['ring']}")
+        # float64 ground truth: only knife-edge pairs may differ
+        gb64 = brute_force_graph(pts, eps, metric)
+        boundary = g0.to_eps_graph().symmetric_difference(gb64)
+        if metric == "hamming":
+            assert boundary == 0   # integer distances have no boundary
 
-    g_lm, st = landmark_host(pts, eps, nranks=8, ghost_mode="coll")
-    print(f"landmark (N=8) : {g_lm}  phases: partition={st.partition_s:.3f}s "
-          f"tree={st.tree_s:.3f}s ghost={st.ghost_s:.3f}s")
+        # the CSR is a real graph object
+        deg = g0.degrees()
+        csr = g0.to_scipy_csr()
+        assert csr.nnz == int(g0.row_ptr[-1])
+        assert (csr.sum(axis=1) == deg).all()
+        print(f"{metric:10s} OK: {oracle.num_edges} edges "
+              f"({boundary} fp32-boundary pairs vs float64), degree "
+              f"min/mean/max = {deg.min()}/{deg.mean():.1f}/{deg.max()}")
 
-    gb = brute_force_graph(pts, eps)
-    assert g_tree == g_sys == g_lm == gb
-    print(f"all three algorithms EXACTLY match brute force "
-          f"({gb.num_edges} edges, avg degree {gb.avg_degree:.1f})")
+    print("\nall metrics x partitions x traversals match the declared-"
+          "arithmetic oracle bit-identically")
 
 
 if __name__ == "__main__":

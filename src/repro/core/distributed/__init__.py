@@ -2,9 +2,11 @@ from .device import (  # noqa: F401
     DeviceForest,
     LandmarkPlan,
     landmark_nng,
+    landmark_run,
     make_nng_mesh,
     plan_landmark,
     plan_landmark_device,
     systolic_nng,
+    systolic_run,
     tree_traverse,
 )

@@ -43,8 +43,12 @@ This is the TPU-native, *sparsity-aware* realization described in DESIGN.md
 Everything is shape-static: neighbor lists are (·, K) id arrays padded with
 INT32_MAX, counts are exact, and overflow flags report capacity misses so the
 host driver can re-plan (grow K / capacities) and re-run — exactness is
-preserved end-to-end (see ``repro.launch.nng_run.run_systolic`` /
-``run_landmark`` for the re-plan loops).
+preserved end-to-end. Both engines sit behind the shared plan → run → grow
+driver in ``repro.nng`` (``build_nng`` is the public entry point;
+``systolic_nng`` / ``landmark_nng`` remain as deprecated tuple-API
+wrappers over the internal ``systolic_run`` / ``landmark_run``). Metrics
+are resolved through ``repro.core.metrics`` — distance arithmetic, block
+summaries and slack policies are registry hooks, never engine branches.
 
 Shapes are planned host-side by ``plan_landmark`` (the "indexing phase"):
 capacity knobs are static compile-time values, as they would be in a real
@@ -53,6 +57,7 @@ deployment where the planner runs on a data sample.
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass
 from typing import NamedTuple
 
@@ -62,6 +67,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map as _shard_map
+from repro.core.metrics import get_metric
 from repro.kernels import (nng_tile_bits, nng_tile_bits_grouped,
                            nng_tile_geometry, tree_frontier_step)
 from repro.kernels.nng_tile import _pack_words
@@ -99,22 +105,11 @@ class DeviceForest(NamedTuple):
 # repro.kernels provides the hand-tiled Pallas equivalents for TPU hot spots)
 # ---------------------------------------------------------------------------
 
-def tile_cdist(x, y, metric: str):
-    """Comparable distances between tiles: sq-L2 (fp32) or Hamming counts."""
-    if metric == "euclidean":
-        x = x.astype(jnp.float32)
-        y = y.astype(jnp.float32)
-        xn = jnp.sum(x * x, axis=-1)[:, None]
-        yn = jnp.sum(y * y, axis=-1)[None, :]
-        d = xn + yn - 2.0 * jax.lax.dot_general(
-            x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-        return jnp.maximum(d, 0.0)
-    if metric == "hamming":
-        xor = jnp.bitwise_xor(x[:, None, :], y[None, :, :])
-        return jnp.sum(
-            jax.lax.population_count(xor).astype(jnp.int32), axis=-1
-        ).astype(jnp.float32)
-    raise ValueError(metric)
+def tile_cdist(x, y, metric):
+    """Comparable distances between tiles — the registered metric's device
+    ``cdist`` (sq-L2 fp32 for euclidean, counts for hamming, |diff| sums
+    for manhattan, whatever a user metric declares)."""
+    return get_metric(metric).cdist(x, y)
 
 
 def _merge_ids(buf, new_ids):
@@ -264,20 +259,10 @@ def tree_traverse(qp, qids, qcells, forest: DeviceForest, eps, k_cap: int,
 # ---------------------------------------------------------------------------
 
 def _block_summary(x, metric):
-    """Bounding (center, radius) of a shard's block in TRUE distance.
-
-    Euclidean: centroid + max L2 distance to it. Hamming: the first block
-    point serves as center (popcount distances are exact integers)."""
-    if metric == "euclidean":
-        xf = x.astype(jnp.float32)
-        c = jnp.mean(xf, axis=0)
-        r = jnp.sqrt(jnp.max(jnp.sum((xf - c[None, :]) ** 2, axis=-1)))
-        return c, r
-    c = x[0]
-    xor = jnp.bitwise_xor(x, c[None, :])
-    r = jnp.max(jnp.sum(jax.lax.population_count(xor).astype(jnp.int32),
-                        axis=-1))
-    return c, r.astype(jnp.float32)
+    """Bounding (center, radius) of a shard's block in TRUE distance —
+    the metric's ``summary`` hook (euclidean: centroid + max L2; generic
+    default: first block point as center, valid in any metric)."""
+    return get_metric(metric).summary(x)
 
 
 def _round_skip_flags(x, partner, eps, *, axis, metric, prune):
@@ -285,24 +270,21 @@ def _round_skip_flags(x, partner, eps, *, axis, metric, prune):
 
     skip[r] is True when no point of my block can be within eps of any
     point of round r's partner block: d(c_me, c_p) > r_me + r_p + eps.
-    Euclidean center distances are fp32, so the bound carries a small
+    Float-metric center distances are fp32, so the bound carries a small
     relative slack — under-pruning is always safe, over-pruning never is.
     """
     nrounds = partner.shape[0]
     if not prune:
         return jnp.zeros((nrounds,), bool)
-    c, rad = _block_summary(x, metric)
+    met = get_metric(metric)
+    c, rad = met.summary(x)
     call = jax.lax.all_gather(c, axis)          # (nranks, d) summary table
     radall = jax.lax.all_gather(rad, axis)      # (nranks,)
     pc = call[partner]
-    if metric == "euclidean":
-        dc = jnp.sqrt(jnp.sum((pc - c[None, :]) ** 2, axis=-1))
-        bound = (rad + radall[partner] + eps) * (1.0 + 1e-5) + 1e-6
-    else:
-        xor = jnp.bitwise_xor(pc, c[None, :])
-        dc = jnp.sum(jax.lax.population_count(xor).astype(jnp.int32),
-                     axis=-1).astype(jnp.float32)
-        bound = rad + radall[partner] + eps
+    dc = met.summary_dist(pc, c)
+    bound = rad + radall[partner] + eps
+    if not met.exact:
+        bound = bound * (1.0 + 1e-5) + 1e-6
     skip = dc > bound
     return skip.at[0].set(False)                # self tile never skipped
 
@@ -337,7 +319,9 @@ def _systolic_local(x, ids, *, axis, nranks, eps, metric, k_cap, prune):
     else:
         sched = jnp.ones((rounds + 1,), bool)
     do_eval = sched & ~skip
-    tiles_skipped = jnp.sum((sched & skip).astype(jnp.int32))
+    # float32 counters everywhere (the RunStats normalization): int32 wraps
+    # at paper scale, fp32 is exact below 2^24 and approximate beyond
+    tiles_skipped = jnp.sum((sched & skip).astype(jnp.float32))
 
     ones = jnp.ones((n_loc,), jnp.int32)
 
@@ -431,7 +415,7 @@ def _systolic_local_tree(x, ids, *forest_arrays, axis, nranks, eps, metric,
     else:
         sched = jnp.ones((rounds + 1,), bool)
     do_eval = sched & ~skip
-    tiles_skipped = jnp.sum((sched & skip).astype(jnp.int32))
+    tiles_skipped = jnp.sum((sched & skip).astype(jnp.float32))
 
     def trav(qp, qids, fr):
         return tree_traverse(qp, qids, qcells, fr, eps, k_cap, metric)
@@ -521,12 +505,12 @@ def _systolic_fn(mesh, eps, metric, k_cap, axis, prune, pallas_mode,
     ))
 
 
-def systolic_nng(
+def systolic_run(
     points,
     eps: float,
     mesh: Mesh,
     *,
-    metric: str = "euclidean",
+    metric="euclidean",
     k_cap: int = 64,
     axis: str = "ring",
     prune: bool = True,
@@ -558,17 +542,30 @@ def systolic_nng(
     ``points`` rows must be a multiple of the ring size (pad upstream with
     far-away sentinel points if needed; repro.launch handles this).
     """
+    met = get_metric(metric)
     nranks = mesh.shape[axis]
     n, _ = points.shape
     assert n % nranks == 0, (n, nranks)
     ids = jnp.arange(n, dtype=jnp.int32)
-    fn = _systolic_fn(mesh, float(eps), metric, k_cap, axis, prune,
+    fn = _systolic_fn(mesh, float(eps), met, k_cap, axis, prune,
                       _pallas_mode(), traversal)
+    points = jnp.asarray(points, met.dtype)
     if traversal == "tree":
         assert forest is not None, "traversal='tree' needs stacked forests"
         ftabs = DeviceForest.from_tables(forest)
         return fn(points, ids, *ftabs)
     return fn(points, ids)
+
+
+def systolic_nng(points, eps, mesh, **kw):
+    """Deprecated alias of ``systolic_run`` (the PR 4 tuple API). Use
+    ``repro.nng.build_nng(points, eps, partition="point", ...)`` instead —
+    same engine, CSR ``NNGraph`` result, shared re-plan driver."""
+    warnings.warn(
+        "systolic_nng is deprecated; use repro.nng.build_nng(..., "
+        "partition='point') or repro.core.distributed.systolic_run",
+        DeprecationWarning, stacklevel=2)
+    return systolic_run(points, eps, mesh, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -645,7 +642,7 @@ def _plan_count_fn(mesh, eps, metric, axis, pallas_mode):
 
 def plan_landmark_device(
     points, centers, f, eps: float, mesh: Mesh, *,
-    metric: str = "euclidean", axis: str = "ring", k_cap: int = 128,
+    metric="euclidean", axis: str = "ring", k_cap: int = 128,
     pad: int = 8,
 ) -> LandmarkPlan:
     """EXACT landmark capacity planning as ONE shard_map counting pass.
@@ -658,11 +655,13 @@ def plan_landmark_device(
     (the neighbor-list width) remains a heuristic the overflow loop may
     still grow.
     """
+    met = get_metric(metric)
     nranks = mesh.shape[axis]
     n, _ = points.shape
     assert n % nranks == 0, (n, nranks)
-    fn = _plan_count_fn(mesh, float(eps), metric, axis, _pallas_mode())
-    coal, ghost, gpp = fn(jnp.asarray(points), jnp.asarray(centers),
+    fn = _plan_count_fn(mesh, float(eps), met, axis, _pallas_mode())
+    coal, ghost, gpp = fn(jnp.asarray(points, met.dtype),
+                          jnp.asarray(centers, met.dtype),
                           jnp.asarray(f, jnp.int32))
     return LandmarkPlan(
         m_centers=int(np.asarray(centers).shape[0]),
@@ -712,23 +711,15 @@ def _lemma1_ghost_bound(x, centers, dpc, d_min, two_eps_c, metric):
     data only over-ghosts where the fp32 error is actually large):
     over-inclusion only costs extra ghost copies (capacity overflow
     re-plans handle it), under-inclusion is never recoverable.
+
+    The slack POLICY is the metric's ``lemma1_slack`` hook: zero for exact
+    integer metrics, the dimension-aware BLAS3 cancellation bound for
+    euclidean, a scale-relative generic slack for other float metrics.
     """
-    if metric != "euclidean":
-        return dpc, d_min + two_eps_c           # integer distances: exact
-    tru = jnp.sqrt(dpc)
-    bound = jnp.sqrt(d_min) + two_eps_c
-    xf = x.astype(jnp.float32)
-    cf = centers.astype(jnp.float32)
-    sx = jnp.sum(xf * xf, axis=-1)              # (n_loc,) per-point ‖p‖²
-    sc = jnp.max(jnp.sum(cf * cf, axis=-1))     # worst center the row meets
-    scale2 = sx + sc + 2.0 * jnp.sqrt(sx * sc)  # >= (‖p‖ + max‖c‖)² per row
-    # DIMENSION-AWARE error coefficient: the BLAS3 accumulation error in
-    # dpc grows ~√d with the contraction length, so a fixed few-ulp
-    # multiple validated at low d would still drop boundary ghosts on
-    # sift-like d=128 data
-    coef = jnp.float32((8.0 + 2.0 * float(np.sqrt(x.shape[1]))) * 6e-8)
-    slack = (coef * scale2 / jnp.maximum(bound, jnp.float32(1e-30))
-             + jnp.float32(1e-5) * bound + jnp.float32(1e-6))
+    met = get_metric(metric)
+    tru = met.true(dpc)
+    bound = met.true(d_min) + two_eps_c
+    slack = met.lemma1_slack(x, centers, tru, bound)
     return tru, bound + slack
 
 
@@ -776,7 +767,7 @@ def _landmark_local(
     # -- Phase 2: coalesce cells via capacity-padded all_to_all -------------
     dest = f[cell]
     payload = {
-        "pts": (x, jnp.float32(0) if metric == "euclidean" else jnp.uint32(0)),
+        "pts": (x, metric.dtype(0)),
         "ids": (ids, SENTINEL),
         "cell": (cell, jnp.int32(-1)),
     }
@@ -828,7 +819,7 @@ def _landmark_local(
     gv = gvalid.reshape(-1)
     gdest = f[gc]
     gpayload = {
-        "pts": (x[gp], jnp.float32(0) if metric == "euclidean" else jnp.uint32(0)),
+        "pts": (x[gp], metric.dtype(0)),
         "ids": (ids[gp], SENTINEL),
         "cell": (gc, jnp.int32(-1)),
     }
@@ -866,15 +857,15 @@ def _landmark_local(
         (dropped_c > 0) | (dropped_g > 0) | (g_dropped > 0)
         | jnp.any(cnt > plan.k_cap) | jnp.any(gcnt > plan.k_cap)
     )[None]
-    tiles_skipped = (w_skip + g_skip)[None]
-    tiles_scheduled = (w_sched + g_sched)[None]
+    tiles_skipped = (w_skip + g_skip).astype(jnp.float32)[None]
+    tiles_scheduled = (w_sched + g_sched).astype(jnp.float32)[None]
     dists_evaluated = (w_dists + g_dists)[None]
     nodes_pruned = (w_pruned + g_pruned)[None]
     return (Wids, nbrs, cnt, Gids, gnbrs, gcnt, overflow,
             tiles_skipped, tiles_scheduled, dists_evaluated, nodes_pruned)
 
 
-def landmark_nng(
+def landmark_run(
     points,
     eps: float,
     centers,
@@ -882,7 +873,7 @@ def landmark_nng(
     mesh: Mesh,
     plan: LandmarkPlan,
     *,
-    metric: str = "euclidean",
+    metric="euclidean",
     axis: str = "ring",
     traversal: str = "tiles",
     forest: dict | None = None,
@@ -906,12 +897,16 @@ def landmark_nng(
     those forests were built from — fed to the engine so Phase 1 cannot
     diverge from the forest scoping on argmin near-ties).
     """
+    met = get_metric(metric)
     nranks = mesh.shape[axis]
     n, _ = points.shape
     assert n % nranks == 0, (n, nranks)
     ids = jnp.arange(n, dtype=jnp.int32)
-    fn = _landmark_fn(mesh, float(eps), metric, plan, axis, _pallas_mode(),
+    fn = _landmark_fn(mesh, float(eps), met, plan, axis, _pallas_mode(),
                       traversal)
+    points = jnp.asarray(points, met.dtype)
+    centers = jnp.asarray(centers, met.dtype)
+    f = jnp.asarray(f, jnp.int32)
     if traversal == "tree":
         assert forest is not None, "traversal='tree' needs stacked forests"
         assert cell is not None, ("traversal='tree' needs the cell "
@@ -920,6 +915,17 @@ def landmark_nng(
         return fn(points, ids, centers, f,
                   jnp.asarray(cell, jnp.int32), *ftabs)
     return fn(points, ids, centers, f)
+
+
+def landmark_nng(points, eps, centers, f, mesh, plan, **kw):
+    """Deprecated alias of ``landmark_run`` (the PR 4 tuple API). Use
+    ``repro.nng.build_nng(points, eps, partition="spatial", ...)`` instead
+    — same engine, CSR ``NNGraph`` result, shared re-plan driver."""
+    warnings.warn(
+        "landmark_nng is deprecated; use repro.nng.build_nng(..., "
+        "partition='spatial') or repro.core.distributed.landmark_run",
+        DeprecationWarning, stacklevel=2)
+    return landmark_run(points, eps, centers, f, mesh, plan, **kw)
 
 
 @functools.lru_cache(maxsize=64)

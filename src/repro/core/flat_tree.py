@@ -186,10 +186,7 @@ class FlatCoverTree:
         """
         gid = np.maximum(self.node_gid, 0)
         coords = self.points[gid]               # (L, N, d), pad slots benign
-        if self.metric.name == "euclidean":
-            coords = np.ascontiguousarray(coords, np.float32)
-        else:
-            coords = np.ascontiguousarray(coords, np.uint32)
+        coords = np.ascontiguousarray(coords, self.metric.dtype)
         return {
             "coords": coords,
             "radius": self.node_radius.astype(np.float32),

@@ -1,7 +1,165 @@
-"""ε-graph edge-set representation and utilities."""
+"""ε-graph results: the CSR ``NNGraph`` public result type, normalized
+``RunStats`` counters, and the ``EpsGraph`` edge-set oracle representation.
+
+``NNGraph`` is what ``repro.nng.build_nng`` returns: a symmetric CSR
+adjacency (``row_ptr`` / ``col_ids``) built from the engines' padded
+per-rank ``(ids, nbrs)`` neighbor tables, carrying a ``RunStats`` and a
+provenance ``meta`` dict. ``EpsGraph`` remains the canonical (i < j)
+edge-set used by the oracles and tests; ``NNGraph.to_eps_graph()`` bridges
+the two.
+
+``RunStats`` is the single naming scheme for work/communication counters
+across host reference algorithms (``PhaseStats`` subclasses it) and the
+device engines — float counters throughout, because the device reports
+float32 (int32 wraps at paper scale) and the host must mirror it."""
 from __future__ import annotations
 
+from dataclasses import dataclass, field
+
 import numpy as np
+
+SENTINEL = 2**31 - 1     # neighbor-table padding id (device.SENTINEL)
+
+
+@dataclass
+class RunStats:
+    """Normalized work / communication counters of one graph build.
+
+    The field names are THE names: device engines, host reference
+    algorithms and benchmark JSON all report these quantities under these
+    keys. Counters are floats end-to-end — the device engines emit float32
+    (exact below 2^24, approximate beyond; int32 would wrap at paper
+    scale) and the host mirrors the convention.
+    """
+
+    tiles_scheduled: float = 0.0   # tile blocks the schedule would evaluate
+    tiles_skipped: float = 0.0     # blocks pruned (triangle ineq. / groups)
+    dists_evaluated: float = 0.0   # pair distances actually computed
+    nodes_pruned: float = 0.0      # tree frontier pairs discarded
+    comm_bytes: dict = field(default_factory=dict)  # channel -> bytes
+    overflow: bool = False         # final run overflowed (never via drivers)
+    replans: int = 0               # overflow -> grow iterations taken
+    elapsed_s: float = 0.0         # wall clock of the final (exact) run
+
+    @property
+    def total_comm_bytes(self) -> float:
+        return float(sum(self.comm_bytes.values()))
+
+    @property
+    def tile_skip_rate(self) -> float:
+        return self.tiles_skipped / max(self.tiles_scheduled, 1.0)
+
+
+class NNGraph:
+    """Symmetric CSR ε-neighbor graph on ``n`` points.
+
+    ``row_ptr`` (n+1,) int64 and ``col_ids`` (nnz,) int32: row i's
+    neighbors are ``col_ids[row_ptr[i]:row_ptr[i+1]]``, sorted ascending.
+    The adjacency is symmetric (both directions stored), so
+    ``row_ptr[-1] == 2 * num_edges``.
+    """
+
+    def __init__(self, n: int, row_ptr: np.ndarray, col_ids: np.ndarray,
+                 stats: RunStats | None = None, meta: dict | None = None):
+        self.n = int(n)
+        self.row_ptr = np.asarray(row_ptr, np.int64)
+        self.col_ids = np.asarray(col_ids, np.int32)
+        assert self.row_ptr.shape == (self.n + 1,)
+        assert self.row_ptr[-1] == len(self.col_ids)
+        self.stats = stats if stats is not None else RunStats()
+        self.meta = dict(meta or {})
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def from_directed_pairs(cls, n: int, src, dst, stats=None, meta=None
+                            ) -> "NNGraph":
+        """Build from directed (src, dst) hit pairs: drops self loops and
+        out-of-range endpoints (driver padding rows), symmetrizes, dedups.
+        """
+        src = np.asarray(src, np.int64)
+        dst = np.asarray(dst, np.int64)
+        keep = (src < n) & (dst < n) & (src >= 0) & (dst >= 0) & (src != dst)
+        src, dst = src[keep], dst[keep]
+        key = np.unique(np.concatenate([src * n + dst, dst * n + src]))
+        rows = key // n
+        cols = key % n
+        row_ptr = np.zeros(n + 1, np.int64)
+        np.cumsum(np.bincount(rows, minlength=n), out=row_ptr[1:])
+        return cls(n, row_ptr, cols.astype(np.int32), stats, meta)
+
+    @classmethod
+    def from_neighbor_tables(cls, n: int, tables, stats=None, meta=None
+                             ) -> "NNGraph":
+        """Build from engine outputs: ``tables`` is an iterable of
+        (ids (m,), nbrs (m, k)) SENTINEL-padded per-row neighbor arrays
+        (one per engine phase — e.g. owned + ghost for the landmark
+        engine). Rows with id >= n (duplicate-padding) are dropped."""
+        src_all, dst_all = [], []
+        for ids, nbrs in tables:
+            ids = np.asarray(ids)
+            nbrs = np.asarray(nbrs)
+            valid = (ids != SENTINEL) & (ids < n)
+            ii, kk = np.nonzero((nbrs != SENTINEL) & valid[:, None])
+            src_all.append(ids[ii])
+            dst_all.append(nbrs[ii, kk])
+        src = np.concatenate(src_all) if src_all else np.zeros(0, np.int64)
+        dst = np.concatenate(dst_all) if dst_all else np.zeros(0, np.int64)
+        return cls.from_directed_pairs(n, src, dst, stats, meta)
+
+    # -- accessors ----------------------------------------------------------
+    @property
+    def num_nodes(self) -> int:
+        return self.n
+
+    @property
+    def num_edges(self) -> int:
+        """Undirected edge count (the symmetric CSR stores 2 per edge)."""
+        return int(self.row_ptr[-1]) // 2
+
+    @property
+    def avg_degree(self) -> float:
+        return float(self.row_ptr[-1]) / max(self.n, 1)
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.row_ptr)
+
+    def neighbors(self, i: int) -> np.ndarray:
+        return self.col_ids[self.row_ptr[i]:self.row_ptr[i + 1]]
+
+    def edge_key(self) -> np.ndarray:
+        """Canonical (i < j) edge keys i * n + j, sorted — the same
+        encoding ``EpsGraph.edge_key`` uses, for direct comparison."""
+        rows = np.repeat(np.arange(self.n, dtype=np.int64),
+                         np.diff(self.row_ptr))
+        cols = self.col_ids.astype(np.int64)
+        upper = rows < cols
+        return np.sort(rows[upper] * self.n + cols[upper])
+
+    def to_eps_graph(self) -> "EpsGraph":
+        rows = np.repeat(np.arange(self.n, dtype=np.int64),
+                         np.diff(self.row_ptr))
+        return EpsGraph(self.n, rows, self.col_ids.astype(np.int64))
+
+    def to_scipy_csr(self):
+        """The adjacency as a ``scipy.sparse.csr_array`` of uint8 ones."""
+        from scipy.sparse import csr_array
+        data = np.ones(len(self.col_ids), np.uint8)
+        return csr_array((data, self.col_ids, self.row_ptr),
+                         shape=(self.n, self.n))
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, NNGraph):
+            return (self.n == other.n
+                    and np.array_equal(self.row_ptr, other.row_ptr)
+                    and np.array_equal(self.col_ids, other.col_ids))
+        if isinstance(other, EpsGraph):
+            return (self.n == other.n
+                    and np.array_equal(self.edge_key(), other.edge_key()))
+        return NotImplemented
+
+    def __repr__(self):
+        return (f"NNGraph(n={self.n}, edges={self.num_edges}, "
+                f"avg_deg={self.avg_degree:.2f})")
 
 
 class EpsGraph:

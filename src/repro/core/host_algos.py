@@ -12,31 +12,28 @@ programs over the TPU mesh.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
 from .covertree import build_covertree
 from .flat_tree import TraversalStats
-from .graph import EpsGraph
+from .graph import EpsGraph, RunStats
 from .landmark import ghost_membership, lpt_assignment, select_centers
 from .metrics_host import get_host_metric
 
 
 @dataclass
-class PhaseStats:
+class PhaseStats(RunStats):
+    """Host-simulation stats: the normalized ``RunStats`` counters
+    (tiles_scheduled / tiles_skipped / dists_evaluated / nodes_pruned /
+    comm_bytes — SAME names and float convention as the device engines)
+    plus the simulated phase timings."""
+
     partition_s: float = 0.0
     tree_s: float = 0.0
     ghost_s: float = 0.0
-    comm_bytes: dict = field(default_factory=dict)
     per_rank_s: np.ndarray | None = None   # simulated per-rank compute time
-    tiles_scheduled: int = 0   # systolic: tiles the ring schedule would run
-    tiles_skipped: int = 0     # systolic: tiles pruned by block summaries
-    # cover-tree traversal work counters (mirror the device engine's
-    # tree-traversal counters: frontier pairs whose distance was computed /
-    # whose subtree was discarded after that one distance)
-    dists_evaluated: int = 0
-    nodes_pruned: int = 0
 
     @property
     def total_s(self):

@@ -12,6 +12,7 @@ import numpy as np
 
 class HostMetric:
     name: str
+    dtype = np.float32      # point-array dtype (device tables use it too)
 
     def cdist(self, x: np.ndarray, y: np.ndarray) -> np.ndarray:
         raise NotImplementedError
@@ -55,8 +56,48 @@ class HostEuclidean(HostMetric):
         return np.sqrt(np.maximum(np.asarray(c, np.float64), 0.0))
 
 
+class HostManhattan(HostMetric):
+    """L1 / city-block distance over float rows.
+
+    Comparable distance IS the true distance (no monotone transform):
+    cover-tree radii arithmetic is additive, so true == comparable keeps
+    every slack formula in one unit. fp32 L1 has no cancellation blow-up
+    (the terms are non-negative), only ~d·ulp accumulation error, which the
+    relative band slack covers before the float64 recheck."""
+
+    name = "manhattan"
+
+    def cdist(self, x, y):
+        x = np.asarray(x, np.float32)
+        y = np.asarray(y, np.float32)
+        q = x.shape[0]
+        out = np.empty((q, y.shape[0]), np.float32)
+        step = max(1, (1 << 24) // max(y.size, 1))
+        for i in range(0, q, step):
+            out[i : i + step] = np.abs(
+                x[i : i + step, None, :] - y[None, :, :]).sum(axis=-1)
+        return out
+
+    def rowwise(self, x, y):
+        # float64 — the framework's exactness ground truth
+        diff = np.asarray(x, np.float64) - np.asarray(y, np.float64)
+        return np.abs(diff).sum(axis=-1)
+
+    def band_slack(self, x, y, ceps):
+        xn = float(np.max(np.abs(x).sum(axis=-1))) if len(x) else 0.0
+        yn = float(np.max(np.abs(y).sum(axis=-1))) if len(y) else 0.0
+        return (xn + yn + ceps) * 1e-6 + 1e-9
+
+    def comparable(self, eps):
+        return float(eps)
+
+    def true(self, c):
+        return np.asarray(c, np.float64)
+
+
 class HostHamming(HostMetric):
     name = "hamming"
+    dtype = np.uint32
 
     def cdist(self, x, y):
         # (q, w) x (p, w) uint32 -> float32 counts. Chunked to bound memory.
@@ -84,8 +125,14 @@ class HostHamming(HostMetric):
         return np.asarray(c, np.float64)
 
 
-HOST_METRICS = {"euclidean": HostEuclidean(), "hamming": HostHamming()}
+HOST_METRICS = {
+    "euclidean": HostEuclidean(),
+    "hamming": HostHamming(),
+    "manhattan": HostManhattan(),
+}
 
 
-def get_host_metric(name: str) -> HostMetric:
+def get_host_metric(name) -> HostMetric:
+    if isinstance(name, HostMetric):
+        return name
     return HOST_METRICS[name]

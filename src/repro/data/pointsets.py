@@ -14,10 +14,14 @@ import numpy as np
 def synthetic_pointset(n: int, dim: int, metric: str = "euclidean",
                        seed: int = 0, n_clusters: int | None = None,
                        cluster_std: float = 0.3, intrinsic_dim: int | None = None):
-    """Clustered low-intrinsic-dimension cloud (the paper's sparsity regime)."""
+    """Clustered low-intrinsic-dimension cloud (the paper's sparsity regime).
+
+    ``metric == "hamming"`` yields packed uint32 bit rows; every other
+    metric (euclidean, manhattan, user-registered float metrics) shares
+    the float32 clustered-manifold generator."""
     rng = np.random.default_rng(seed)
     n_clusters = n_clusters or max(8, int(np.sqrt(n) / 4))
-    if metric == "euclidean":
+    if metric != "hamming":
         idim = intrinsic_dim or max(2, dim // 8)
         # clusters on a low-dim manifold embedded in dim
         basis = rng.normal(size=(idim, dim)).astype(np.float32)

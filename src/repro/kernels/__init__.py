@@ -1,9 +1,5 @@
 from .ops import (  # noqa: F401
-    Euclidean,
-    Hamming,
-    Metric,
     eps_count,
-    get_metric,
     grouped_block_active,
     nng_tile_bits,
     nng_tile_bits_grouped,

@@ -41,7 +41,18 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+
+
+def _eps2_f32(eps: float) -> float:
+    """The canonical L2 comparable threshold: eps rounded to fp32, squared
+    IN fp32 — exactly what the jnp oracles (``jnp.float32(eps) ** 2``) and
+    the frontier kernels (``eps_f * eps_f``) compute. The Pallas kernels
+    must embed the same value, or a pair whose fp32 d² lands exactly on
+    the threshold classifies differently between kernel and oracle paths
+    (1-ulp threshold skew)."""
+    return float(np.float32(eps) ** 2)
 
 
 def _pack_words(hit):
@@ -64,6 +75,20 @@ def _l2_tile_d2(x, y):
     xs = (x * x).sum(axis=1)[:, None]
     ys = (y * y).sum(axis=1)[None, :]
     return xs + ys - 2.0 * acc
+
+
+def _l1_tile_d(x, y, cchunk: int):
+    """Shared L1 (Manhattan) distance body: (TQ, d) x (TP, d) fp32 -> (TQ,
+    TP) sums of |x - y|. No BLAS3 expansion exists for L1, so like Hamming
+    it is VPU work; the feature dim is chunked so the (TQ, TP, C) cube
+    stays VMEM-resident (d is static inside the kernel)."""
+    tq, dcols = x.shape
+    tp = y.shape[0]
+    d = jnp.zeros((tq, tp), jnp.float32)
+    for c0 in range(0, dcols, cchunk):
+        diff = x[:, None, c0:c0 + cchunk] - y[None, :, c0:c0 + cchunk]
+        d = d + jnp.sum(jnp.abs(diff), axis=-1)
+    return d
 
 
 def _hamming_tile_d(x, y, wchunk: int):
@@ -110,7 +135,7 @@ def nng_tile_pallas(
     p, _ = y.shape
     assert q % tq == 0 and p % tp == 0 and tp % 32 == 0
     grid = (q // tq, p // tp)
-    kernel = functools.partial(_nng_tile_kernel, eps2=float(eps) ** 2)
+    kernel = functools.partial(_nng_tile_kernel, eps2=_eps2_f32(eps))
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -204,6 +229,71 @@ def nng_tile_hamming_ref(x, y, y_valid, eps: float):
 
 
 # ---------------------------------------------------------------------------
+# Manhattan / L1 variant (fp32 rows, true-distance threshold). Proves the
+# metric registry extends without touching engine code: registered from here
+# exactly like the seed metrics.
+# ---------------------------------------------------------------------------
+
+def _nng_tile_l1_kernel(
+    x_ref, y_ref, yvalid_ref, cnt_ref, bits_ref, *, eps: float, cchunk: int
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    d = _l1_tile_d(x_ref[...], y_ref[...], cchunk)          # (TQ, TP)
+    hit = (d <= jnp.float32(eps)) & (yvalid_ref[...] != 0)[None, :]
+    cnt_ref[...] += jnp.sum(hit.astype(jnp.int32), axis=1)
+    bits_ref[...] = _pack_words(hit)
+
+
+def nng_tile_l1_pallas(
+    x, y, y_valid, eps: float, *, tq: int = 128, tp: int = 256,
+    cchunk: int = 8, interpret: bool = False,
+):
+    """x (q, d), y (p, d) fp32, y_valid (p,) int32 ->
+    (cnt (q,), bits (q, p/32)). Same tiling contract as the Hamming variant;
+    feature-dim padding must be zero in BOTH operands (|0 - 0| = 0)."""
+    q, d = x.shape
+    p, _ = y.shape
+    assert q % tq == 0 and p % tp == 0 and tp % 32 == 0 and d % cchunk == 0
+    grid = (q // tq, p // tp)
+    kernel = functools.partial(
+        _nng_tile_l1_kernel, eps=float(eps), cchunk=cchunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tp, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tp,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+            pl.BlockSpec((tq, tp // 32), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+            jax.ShapeDtypeStruct((q, p // 32), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(x, y, y_valid)
+
+
+def nng_tile_l1_ref(x, y, y_valid, eps: float, cchunk: int = 8):
+    """Pure-jnp oracle — the SAME chunked summation body as the kernel, so
+    fp32 association order (and therefore knife-edge classification) cannot
+    diverge between the jnp fast path and the compiled kernel."""
+    d = _l1_tile_d(jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32),
+                   cchunk)
+    hit = (d <= jnp.float32(eps)) & (y_valid != 0)[None, :]
+    cnt = jnp.sum(hit.astype(jnp.int32), axis=1)
+    return cnt, _pack_words(hit)
+
+
+# ---------------------------------------------------------------------------
 # Group-aware variants (landmark engine): cell equality + validity + self-
 # pair exclusion fused next to the ε-threshold, with whole-block skipping
 # over cell-sorted buffers.
@@ -282,7 +372,7 @@ def nng_tile_grouped_pallas(
     p, _ = y.shape
     assert q % tq == 0 and p % tp == 0 and tp % 32 == 0
     grid = (q // tq, p // tp)
-    kernel = functools.partial(_nng_tile_grouped_kernel, eps2=float(eps) ** 2)
+    kernel = functools.partial(_nng_tile_grouped_kernel, eps2=_eps2_f32(eps))
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -386,5 +476,78 @@ def nng_tile_grouped_hamming_ref(
     xor = jnp.bitwise_xor(x[:, None, :], y[None, :, :])
     d = jnp.sum(jax.lax.population_count(xor).astype(jnp.int32), axis=-1)
     hit = _grouped_hit(d <= jnp.int32(int(eps)), x_group, y_group,
+                       x_group >= 0, y_group >= 0, x_ids, y_ids)
+    return jnp.sum(hit.astype(jnp.int32), axis=1), _pack_words(hit)
+
+
+def _nng_tile_grouped_l1_kernel(
+    x_ref, y_ref, xg_ref, yg_ref, xid_ref, yid_ref, cnt_ref, bits_ref, *,
+    eps: float, cchunk: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    xg = xg_ref[...]
+    yg = yg_ref[...]
+    xv, yv, active = _group_ranges(xg, yg)
+
+    @pl.when(active)
+    def _compute():
+        d = _l1_tile_d(x_ref[...], y_ref[...], cchunk)       # (TQ, TP)
+        hit = _grouped_hit(d <= jnp.float32(eps), xg, yg, xv, yv,
+                           xid_ref[...], yid_ref[...])
+        cnt_ref[...] += jnp.sum(hit.astype(jnp.int32), axis=1)
+        bits_ref[...] = _pack_words(hit)
+
+    @pl.when(~active)
+    def _skip():
+        bits_ref[...] = jnp.zeros_like(bits_ref)
+
+
+def nng_tile_grouped_l1_pallas(
+    x, y, x_group, y_group, x_ids, y_ids, eps: float, *, tq: int = 128,
+    tp: int = 256, cchunk: int = 8, interpret: bool = False,
+):
+    """Group-aware L1 tile over fp32 rows; same contract as
+    ``nng_tile_grouped_pallas`` with the true-distance threshold."""
+    q, d = x.shape
+    p, _ = y.shape
+    assert q % tq == 0 and p % tp == 0 and tp % 32 == 0 and d % cchunk == 0
+    grid = (q // tq, p // tp)
+    kernel = functools.partial(
+        _nng_tile_grouped_l1_kernel, eps=float(eps), cchunk=cchunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tp, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+            pl.BlockSpec((tp,), lambda i, j: (j,)),
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+            pl.BlockSpec((tp,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+            pl.BlockSpec((tq, tp // 32), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+            jax.ShapeDtypeStruct((q, p // 32), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(x, y, x_group, y_group, x_ids, y_ids)
+
+
+def nng_tile_grouped_l1_ref(
+    x, y, x_group, y_group, x_ids, y_ids, eps: float, cchunk: int = 8
+):
+    """Pure-jnp oracle for the grouped L1 tile (same chunked summation)."""
+    d = _l1_tile_d(jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32),
+                   cchunk)
+    hit = _grouped_hit(d <= jnp.float32(eps), x_group, y_group,
                        x_group >= 0, y_group >= 0, x_ids, y_ids)
     return jnp.sum(hit.astype(jnp.int32), axis=1), _pack_words(hit)

@@ -21,17 +21,17 @@ import numpy as np
 
 from . import ref
 from .eps_count import eps_count_pallas
-from .nng_tile import (_GBIG, nng_tile_grouped_hamming_pallas,
-                       nng_tile_grouped_hamming_ref, nng_tile_grouped_pallas,
-                       nng_tile_grouped_ref, nng_tile_hamming_pallas,
-                       nng_tile_hamming_ref, nng_tile_pallas, nng_tile_ref)
+from .nng_tile import _GBIG, _grouped_hit, _pack_words
 from .pairwise_hamming import pairwise_hamming_pallas
 from .pairwise_l2 import pairwise_sqdist_pallas
-from .tree_frontier import (tree_frontier_hamming_pallas,
-                            tree_frontier_hamming_ref, tree_frontier_pallas,
-                            tree_frontier_ref)
+from .tree_frontier import _frontier_masks_float, _unpack_words
 
-_BIG = jnp.float32(3.0e38)
+
+def _resolve_metric(metric):
+    """str | Metric -> the registry Metric (lazy import: the registry lives
+    in ``repro.core.metrics``, which imports this package's raw kernels)."""
+    from repro.core.metrics import get_metric
+    return get_metric(metric)
 
 
 def _mode() -> str:
@@ -123,82 +123,61 @@ def eps_count(x, y, eps: float) -> jnp.ndarray:
     return out[:q]
 
 
-def _round_up(v: int, mult: int) -> int:
-    return ((v + mult - 1) // mult) * mult
+@functools.partial(
+    jax.jit, static_argnames=("fn", "eps", "tq", "tp", "interpret"))
+def _tile_padded_call(x, y, yv, *, fn, eps, tq, tp, interpret):
+    return fn(x, y, yv, eps, tq=tq, tp=tp, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "tq", "tp", "interpret"))
-def _nng_tile_l2_padded(x, y, yv, eps, tq, tp, interpret):
-    return nng_tile_pallas(x, y, yv, eps, tq=tq, tp=tp, interpret=interpret)
-
-
-@functools.partial(jax.jit, static_argnames=("eps", "tq", "tp", "interpret"))
-def _nng_tile_ham_padded(x, y, yv, eps, tq, tp, interpret):
-    return nng_tile_hamming_pallas(
-        x, y, yv, eps, tq=tq, tp=tp, interpret=interpret)
-
-
-def nng_tile_bits(x, y, y_valid, eps: float, metric: str = "euclidean"):
+def nng_tile_bits(x, y, y_valid, eps: float, metric="euclidean"):
     """Fused ε-NNG tile: (cnt (q,), bits (q, ceil(p/32)) uint32).
 
     cnt[i] = |{j : valid[j] and d(x_i, y_j) <= eps}| (true-distance eps for
-    both metrics); bits packs the hit mask little-endian (column j -> word
+    every metric); bits packs the hit mask little-endian (column j -> word
     j // 32, bit j % 32). Pads to tile multiples internally; pad rows carry
     y_valid = 0, so bits beyond column p - 1 are always zero. On the
-    compiled/interpret path the fp32 distance tile never leaves VMEM.
+    compiled/interpret path the distance tile never leaves VMEM.
+
+    ``metric`` is a registry name or ``Metric`` object. A metric without a
+    tile kernel runs the generic pure-jnp fallback (comparable threshold
+    over ``metric.cdist``) — slower, but the same edge set.
     """
+    met = _resolve_metric(metric)
     mode = _mode()
     q = x.shape[0]
     p = y.shape[0]
     nw = -(-p // 32)
     yv = jnp.asarray(y_valid, jnp.int32)
-    if metric == "euclidean":
-        x = jnp.asarray(x, jnp.float32)
-        y = jnp.asarray(y, jnp.float32)
-        if mode == "jnp":
+    x = jnp.asarray(x, met.dtype)
+    y = jnp.asarray(y, met.dtype)
+    if met.tile_pallas is None or mode == "jnp":
+        if met.tile_ref is not None:
             yp, _ = _pad_rows(y, 32)
             yvp, _ = _pad_rows(yv, 32)
-            cnt, bits = nng_tile_ref(x, yp, yvp, eps)
+            cnt, bits = met.tile_ref(x, yp, yvp, eps)
             return cnt, bits[:, :nw]
-        tq, tp = nng_tile_geometry(q, p, metric)
-        xp, _ = _pad_rows(x, tq)
-        yp, _ = _pad_rows(y, tp)
-        yvp, _ = _pad_rows(yv, tp)
-        xp = _pad_cols(xp, 128)
-        yp = _pad_cols(yp, 128)
-        cnt, bits = _nng_tile_l2_padded(
-            xp, yp, yvp, float(eps), tq, tp, mode == "interpret")
-        return cnt[:q], bits[:q, :nw]
-    if metric == "hamming":
-        x = jnp.asarray(x, jnp.uint32)
-        y = jnp.asarray(y, jnp.uint32)
-        if mode == "jnp":
-            yp, _ = _pad_rows(y, 32)
-            yvp, _ = _pad_rows(yv, 32)
-            cnt, bits = nng_tile_hamming_ref(x, yp, yvp, eps)
-            return cnt, bits[:, :nw]
-        tq, tp = nng_tile_geometry(q, p, metric)
-        xp, _ = _pad_rows(x, tq)
-        yp, _ = _pad_rows(y, tp)
-        yvp, _ = _pad_rows(yv, tp)
-        xp = _pad_cols(xp, 8)
-        yp = _pad_cols(yp, 8)
-        cnt, bits = _nng_tile_ham_padded(
-            xp, yp, yvp, float(eps), tq, tp, mode == "interpret")
-        return cnt[:q], bits[:q, :nw]
-    raise ValueError(metric)
+        hit = (met.cdist(x, y) <= met.comparable(eps)) & (yv != 0)[None, :]
+        cnt = jnp.sum(hit.astype(jnp.int32), axis=1)
+        if nw * 32 > p:
+            hit = jnp.pad(hit, [(0, 0), (0, nw * 32 - p)])
+        return cnt, _pack_words(hit)
+    tq, tp = met.tile_shape(q, p)
+    xp, _ = _pad_rows(x, tq)
+    yp, _ = _pad_rows(y, tp)
+    yvp, _ = _pad_rows(yv, tp)
+    xp = _pad_cols(xp, met.col_mult)
+    yp = _pad_cols(yp, met.col_mult)
+    cnt, bits = _tile_padded_call(
+        xp, yp, yvp, fn=met.tile_pallas, eps=float(eps), tq=tq, tp=tp,
+        interpret=mode == "interpret")
+    return cnt[:q], bits[:q, :nw]
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "tq", "tp", "interpret"))
-def _nng_tile_grp_l2_padded(x, y, xg, yg, xid, yid, eps, tq, tp, interpret):
-    return nng_tile_grouped_pallas(
-        x, y, xg, yg, xid, yid, eps, tq=tq, tp=tp, interpret=interpret)
-
-
-@functools.partial(jax.jit, static_argnames=("eps", "tq", "tp", "interpret"))
-def _nng_tile_grp_ham_padded(x, y, xg, yg, xid, yid, eps, tq, tp, interpret):
-    return nng_tile_grouped_hamming_pallas(
-        x, y, xg, yg, xid, yid, eps, tq=tq, tp=tp, interpret=interpret)
+@functools.partial(
+    jax.jit, static_argnames=("fn", "eps", "tq", "tp", "interpret"))
+def _grouped_padded_call(x, y, xg, yg, xid, yid, *, fn, eps, tq, tp,
+                         interpret):
+    return fn(x, y, xg, yg, xid, yid, eps, tq=tq, tp=tp, interpret=interpret)
 
 
 def grouped_block_active(x_group, y_group, tq: int, tp: int):
@@ -223,26 +202,18 @@ def grouped_block_active(x_group, y_group, tq: int, tp: int):
             & (ymin[None, :] <= xmax[:, None]))
 
 
-def nng_tile_geometry(q: int, p: int, metric: str) -> tuple[int, int]:
+def nng_tile_geometry(q: int, p: int, metric) -> tuple[int, int]:
     """The (tq, tp) block shape the fused tile wrappers (``nng_tile_bits``
     and ``nng_tile_bits_grouped``) use for given operand row counts — the
-    single source of truth for tile tuning, exposed so callers can
-    reproduce the grouped tile-block accounting (benchmarks, parity
-    tests)."""
-    if metric == "euclidean":
-        tq = 256 if q >= 256 else _round_up(q, 8)
-        tp = 512 if p >= 512 else _round_up(p, 128)
-    elif metric == "hamming":
-        tq = 128 if q >= 128 else _round_up(q, 8)
-        tp = 256 if p >= 256 else _round_up(p, 128)
-    else:
-        raise ValueError(metric)
-    return tq, tp
+    single source of truth for tile tuning (now carried per-metric by the
+    registry), exposed so callers can reproduce the grouped tile-block
+    accounting (benchmarks, parity tests)."""
+    return _resolve_metric(metric).tile_shape(q, p)
 
 
 def nng_tile_bits_grouped(
     x, y, x_group, y_group, x_ids, y_ids, eps: float,
-    metric: str = "euclidean",
+    metric="euclidean",
 ):
     """Group-aware fused ε-NNG tile for the landmark engine.
 
@@ -258,15 +229,18 @@ def nng_tile_bits_grouped(
     rows so group ranges per tile are tight and the skip actually fires;
     skipping is conservative (a block is only skipped when NO same-group
     pair can exist in it), so results never depend on the row order.
-    Pads to tile multiples internally (pad rows get group -1)."""
+    Pads to tile multiples internally (pad rows get group -1).
+
+    ``metric`` is a registry name or ``Metric``; metrics without a grouped
+    kernel run the generic pure-jnp fallback over ``metric.cdist``."""
+    met = _resolve_metric(metric)
     mode = _mode()
     q = x.shape[0]
     p = y.shape[0]
     nw = -(-p // 32)
-    tq, tp = nng_tile_geometry(q, p, metric)
-    dtype = jnp.float32 if metric == "euclidean" else jnp.uint32
-    xp, _ = _pad_rows(jnp.asarray(x, dtype), tq)
-    yp, _ = _pad_rows(jnp.asarray(y, dtype), tp)
+    tq, tp = met.tile_shape(q, p)
+    xp, _ = _pad_rows(jnp.asarray(x, met.dtype), tq)
+    yp, _ = _pad_rows(jnp.asarray(y, met.dtype), tp)
     xgp, _ = _pad_rows(jnp.asarray(x_group, jnp.int32), tq, value=-1)
     ygp, _ = _pad_rows(jnp.asarray(y_group, jnp.int32), tp, value=-1)
     xidp, _ = _pad_rows(jnp.asarray(x_ids, jnp.int32), tq, value=-1)
@@ -274,35 +248,33 @@ def nng_tile_bits_grouped(
     active = grouped_block_active(xgp, ygp, tq, tp)
     scheduled = jnp.int32(active.size)
     skipped = scheduled - jnp.sum(active.astype(jnp.int32))
-    if mode == "jnp":
-        reff = (nng_tile_grouped_ref if metric == "euclidean"
-                else nng_tile_grouped_hamming_ref)
-        cnt, bits = reff(xp, yp, xgp, ygp, xidp, yidp, eps)
+    if met.grouped_pallas is None or mode == "jnp":
+        if met.grouped_ref is not None:
+            cnt, bits = met.grouped_ref(xp, yp, xgp, ygp, xidp, yidp, eps)
+        else:
+            hit = _grouped_hit(
+                met.cdist(xp, yp) <= met.comparable(eps), xgp, ygp,
+                xgp >= 0, ygp >= 0, xidp, yidp)
+            cnt = jnp.sum(hit.astype(jnp.int32), axis=1)
+            bits = _pack_words(hit)
     else:
-        cmul = 128 if metric == "euclidean" else 8
-        xp = _pad_cols(xp, cmul)
-        yp = _pad_cols(yp, cmul)
-        fn = (_nng_tile_grp_l2_padded if metric == "euclidean"
-              else _nng_tile_grp_ham_padded)
-        cnt, bits = fn(xp, yp, xgp, ygp, xidp, yidp, float(eps), tq, tp,
-                       mode == "interpret")
+        xp = _pad_cols(xp, met.col_mult)
+        yp = _pad_cols(yp, met.col_mult)
+        cnt, bits = _grouped_padded_call(
+            xp, yp, xgp, ygp, xidp, yidp, fn=met.grouped_pallas,
+            eps=float(eps), tq=tq, tp=tp, interpret=mode == "interpret")
     return cnt[:q], bits[:q, :nw], scheduled, skipped
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "tq", "tn", "interpret"))
-def _tree_frontier_l2_padded(q, c, rad, leaf, act, eps, tq, tn, interpret):
-    return tree_frontier_pallas(q, c, rad, leaf, act, eps, tq=tq, tn=tn,
-                                interpret=interpret)
-
-
-@functools.partial(jax.jit, static_argnames=("eps", "tq", "tn", "interpret"))
-def _tree_frontier_ham_padded(q, c, rad, leaf, act, eps, tq, tn, interpret):
-    return tree_frontier_hamming_pallas(q, c, rad, leaf, act, eps, tq=tq,
-                                        tn=tn, interpret=interpret)
+@functools.partial(
+    jax.jit, static_argnames=("fn", "eps", "tq", "tn", "interpret"))
+def _frontier_padded_call(q, c, rad, leaf, act, *, fn, eps, tq, tn,
+                          interpret):
+    return fn(q, c, rad, leaf, act, eps, tq=tq, tn=tn, interpret=interpret)
 
 
 def tree_frontier_step(q, c, rad, leaf, act_bits, eps: float,
-                       metric: str = "euclidean"):
+                       metric="euclidean"):
     """One level of the batched cover-tree traversal, fused.
 
     q (nq, d) queries; c (N, d) level-node coords; rad (N,) fp32 radii;
@@ -313,7 +285,13 @@ def tree_frontier_step(q, c, rad, leaf, act_bits, eps: float,
     the next level's frontier (see ``repro.kernels.tree_frontier`` for the
     decision rules and fp32 slack policy). Pads to tile multiples
     internally; pad rows/columns are inactive and emit nothing.
+
+    ``metric`` is a registry name or ``Metric``; metrics without a
+    frontier kernel run a generic jnp fallback (true distances over
+    ``metric.cdist`` + the shared float decision epilogue — conservative
+    slack, exact at the leaves).
     """
+    met = _resolve_metric(metric)
     mode = _mode()
     nq = q.shape[0]
     N = c.shape[0]
@@ -322,14 +300,16 @@ def tree_frontier_step(q, c, rad, leaf, act_bits, eps: float,
     rad = jnp.asarray(rad, jnp.float32)
     leaf = jnp.asarray(leaf, jnp.int32)
     act_bits = jnp.asarray(act_bits, jnp.uint32)
-    dtype = jnp.float32 if metric == "euclidean" else jnp.uint32
-    q = jnp.asarray(q, dtype)
-    c = jnp.asarray(c, dtype)
-    if mode == "jnp":
-        reff = (tree_frontier_ref if metric == "euclidean"
-                else tree_frontier_hamming_ref)
-        return reff(q, c, rad, leaf, act_bits, eps)
-    tq, tn = nng_tile_geometry(nq, N, metric)
+    q = jnp.asarray(q, met.dtype)
+    c = jnp.asarray(c, met.dtype)
+    if met.frontier_pallas is None or mode == "jnp":
+        if met.frontier_ref is not None:
+            return met.frontier_ref(q, c, rad, leaf, act_bits, eps)
+        active = _unpack_words(act_bits)
+        d = met.true(met.cdist(q, c))
+        emit, expand = _frontier_masks_float(d, rad, leaf, active, eps)
+        return _pack_words(emit), _pack_words(expand)
+    tq, tn = met.tile_shape(nq, N)
     qp, _ = _pad_rows(q, tq)
     actp, _ = _pad_rows(act_bits, tq)
     cp, _ = _pad_rows(c, tn)
@@ -337,13 +317,11 @@ def tree_frontier_step(q, c, rad, leaf, act_bits, eps: float,
     leafp, _ = _pad_rows(leaf, tn)
     # node-axis padding extends the WORD axis of the packed masks
     actp = jnp.pad(actp, [(0, 0), (0, tn * ((N + tn - 1) // tn) // 32 - nw)])
-    cmul = 128 if metric == "euclidean" else 8
-    qp = _pad_cols(qp, cmul)
-    cp = _pad_cols(cp, cmul)
-    fn = (_tree_frontier_l2_padded if metric == "euclidean"
-          else _tree_frontier_ham_padded)
-    emit, expand = fn(qp, cp, radp, leafp, actp, float(eps), tq, tn,
-                      mode == "interpret")
+    qp = _pad_cols(qp, met.col_mult)
+    cp = _pad_cols(cp, met.col_mult)
+    emit, expand = _frontier_padded_call(
+        qp, cp, radp, leafp, actp, fn=met.frontier_pallas, eps=float(eps),
+        tq=tq, tn=tn, interpret=mode == "interpret")
     return emit[:nq, :nw], expand[:nq, :nw]
 
 
@@ -361,60 +339,6 @@ def rowwise_hamming(x, y):
     return jnp.sum(jax.lax.population_count(xor).astype(jnp.int32), axis=-1)
 
 
-# ---------------------------------------------------------------------------
-# Metric dispatch used by the NNG core. Distances are "comparable" values:
-# squared L2 for euclidean (compare vs eps^2), raw counts for hamming.
-# ---------------------------------------------------------------------------
-
-class Metric:
-    """A metric with a batched comparable-distance matrix and threshold map."""
-
-    name: str
-
-    def cdist(self, x, y):  # comparable distances (monotone in true distance)
-        raise NotImplementedError
-
-    def comparable(self, eps: float) -> float:  # map true eps -> comparable
-        raise NotImplementedError
-
-    def true(self, c):  # comparable -> true distance (for radii arithmetic)
-        raise NotImplementedError
-
-
-class Euclidean(Metric):
-    name = "euclidean"
-
-    def cdist(self, x, y):
-        return pairwise_sqdist(x, y)
-
-    def rowwise(self, x, y):
-        return rowwise_sqdist(x, y)
-
-    def comparable(self, eps: float) -> float:
-        return float(eps) ** 2
-
-    def true(self, c):
-        return jnp.sqrt(jnp.maximum(jnp.asarray(c, jnp.float32), 0.0))
-
-
-class Hamming(Metric):
-    name = "hamming"
-
-    def cdist(self, x, y):
-        return pairwise_hamming(x, y).astype(jnp.float32)
-
-    def rowwise(self, x, y):
-        return rowwise_hamming(x, y).astype(jnp.float32)
-
-    def comparable(self, eps: float) -> float:
-        return float(eps)
-
-    def true(self, c):
-        return jnp.asarray(c, jnp.float32)
-
-
-METRICS = {"euclidean": Euclidean(), "hamming": Hamming()}
-
-
-def get_metric(name: str) -> Metric:
-    return METRICS[name]
+# NOTE: metric dispatch moved to the registry in ``repro.core.metrics`` —
+# every wrapper above resolves names through it, and new metrics register
+# there without touching this module.

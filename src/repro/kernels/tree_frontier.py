@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .nng_tile import _hamming_tile_d, _l2_tile_d2, _pack_words
+from .nng_tile import _hamming_tile_d, _l1_tile_d, _l2_tile_d2, _pack_words
 
 
 def _unpack_words(bits):
@@ -46,20 +46,30 @@ def _unpack_words(bits):
     return b.reshape(tq, w * 32)
 
 
-def _frontier_masks_l2(d2, rad, leaf, active, eps):
-    """Shared L2 decision epilogue: (TQ, TN) d2 tile -> (emit, expand)."""
+def _frontier_masks_float(d, rad, leaf, active, eps, leaf_hit=None):
+    """Shared float-metric decision epilogue over TRUE distances d (TQ, TN)
+    -> (emit, expand). ``leaf_hit`` overrides the exact leaf test when the
+    caller has a sharper form (L2 compares d2 vs eps² with no sqrt)."""
     eps_f = jnp.float32(eps)
-    d = jnp.sqrt(jnp.maximum(d2, 0.0))
     radr = rad[None, :]
     # scale-relative fp32 slack (same family as the block-summary prune and
     # Lemma-1 slacks): also covers the fp32 rounding of the float64 radii
     slack = (d + radr + eps_f) * jnp.float32(1e-5) + jnp.float32(1e-6)
     leafb = (leaf != 0)[None, :]
-    leaf_hit = d2 <= eps_f * eps_f
+    if leaf_hit is None:
+        leaf_hit = d <= eps_f
     incl = d + radr <= eps_f - slack
     emit = active & jnp.where(leafb, leaf_hit, incl)
     expand = active & ~leafb & ~emit & (d <= radr + eps_f + slack)
     return emit, expand
+
+
+def _frontier_masks_l2(d2, rad, leaf, active, eps):
+    """L2 decision epilogue: (TQ, TN) squared-distance tile -> masks."""
+    eps_f = jnp.float32(eps)
+    d = jnp.sqrt(jnp.maximum(d2, 0.0))
+    return _frontier_masks_float(d, rad, leaf, active, eps,
+                                 leaf_hit=d2 <= eps_f * eps_f)
 
 
 def _frontier_masks_hamming(d, rad, leaf, active, eps):
@@ -211,4 +221,73 @@ def tree_frontier_hamming_ref(q, c, rad, leaf, act_bits, eps: float):
     xor = jnp.bitwise_xor(q[:, None, :], c[None, :, :])
     d = jnp.sum(jax.lax.population_count(xor).astype(jnp.int32), axis=-1)
     emit, expand = _frontier_masks_hamming(d, rad, leaf, active, eps)
+    return _pack_words(emit), _pack_words(expand)
+
+
+# ---------------------------------------------------------------------------
+# Manhattan / L1 variant (fp32 rows; L1 IS the true distance)
+# ---------------------------------------------------------------------------
+
+def _tree_frontier_l1_kernel(
+    q_ref, c_ref, rad_ref, leaf_ref, act_ref, emit_ref, exp_ref, *,
+    eps: float, cchunk: int,
+):
+    act = act_ref[...]
+
+    @pl.when(jnp.any(act != 0))
+    def _compute():
+        active = _unpack_words(act)
+        d = _l1_tile_d(q_ref[...], c_ref[...], cchunk)       # (TQ, TN)
+        emit, expand = _frontier_masks_float(
+            d, rad_ref[...], leaf_ref[...], active, eps)
+        emit_ref[...] = _pack_words(emit)
+        exp_ref[...] = _pack_words(expand)
+
+    @pl.when(~jnp.any(act != 0))
+    def _skip():
+        emit_ref[...] = jnp.zeros_like(emit_ref)
+        exp_ref[...] = jnp.zeros_like(exp_ref)
+
+
+def tree_frontier_l1_pallas(
+    q, c, rad, leaf, act_bits, eps: float, *, tq: int = 128, tn: int = 256,
+    cchunk: int = 8, interpret: bool = False,
+):
+    """L1 frontier tile over fp32 rows; same tiling contract as the L2
+    variant, true-distance thresholds with the shared float slack."""
+    nq, d = q.shape
+    N = c.shape[0]
+    assert nq % tq == 0 and N % tn == 0 and tn % 32 == 0 and d % cchunk == 0
+    grid = (nq // tq, N // tn)
+    kernel = functools.partial(
+        _tree_frontier_l1_kernel, eps=float(eps), cchunk=cchunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tn,), lambda i, j: (j,)),
+            pl.BlockSpec((tn,), lambda i, j: (j,)),
+            pl.BlockSpec((tq, tn // 32), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq, tn // 32), lambda i, j: (i, j)),
+            pl.BlockSpec((tq, tn // 32), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, N // 32), jnp.uint32),
+            jax.ShapeDtypeStruct((nq, N // 32), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(q, c, rad, leaf, act_bits)
+
+
+def tree_frontier_l1_ref(q, c, rad, leaf, act_bits, eps: float,
+                         cchunk: int = 8):
+    """Pure-jnp oracle (same chunked fp32 summation as the kernel)."""
+    active = _unpack_words(act_bits)
+    d = _l1_tile_d(jnp.asarray(q, jnp.float32), jnp.asarray(c, jnp.float32),
+                   cchunk)
+    emit, expand = _frontier_masks_float(d, rad, leaf, active, eps)
     return _pack_words(emit), _pack_words(expand)

@@ -1,22 +1,27 @@
 """Distributed ε-NNG job driver (the paper's workload, end to end).
 
+A thin CLI over the public front-end ``repro.nng.build_nng``: pick a
+metric (any registry name), a partition strategy, a traversal flavor and a
+planner, get back the CSR ``NNGraph``, optionally verified against the
+brute-force oracle.
+
 Runs on the available devices (ring mesh); on this container that is 1 CPU
-device unless XLA_FLAGS requests more. Verifies the device engine against
-the brute-force oracle at small scale.
+device unless XLA_FLAGS requests more.
 
 Usage:
   python -m repro.launch.nng_run --n 4096 --dim 8 --eps 1.0 \
       --algo landmark --verify
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-      python -m repro.launch.nng_run --n 8192 --dim 16 --algo systolic
+      python -m repro.launch.nng_run --n 8192 --dim 16 --algo systolic \
+      --metric manhattan
+
+``run_systolic`` / ``run_landmark`` remain as thin adapters over the
+unified ``repro.nng.drive`` loop, returning the historical tuple shapes
+(benchmarks and regression tests still consume them).
 """
 from __future__ import annotations
 
 import argparse
-import time
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 SEN = 2**31 - 1
@@ -24,69 +29,43 @@ SEN = 2**31 - 1
 
 def run_systolic(pts, eps, mesh, *, metric="euclidean", k_cap=64,
                  prune=True, max_grows=6, traversal="tiles", forest=None):
-    """Systolic engine + re-plan loop: on overflow, grow k_cap to the exact
-    max neighbor count (cnt is always exact) and re-run. Returns
+    """Systolic engine via the unified driver. Returns
     (nbrs, cnt, counters, k_cap) with overflow guaranteed False;
     ``counters`` = (tiles_skipped, dists_evaluated, nodes_pruned) per-rank
     arrays. ``traversal="tree"`` builds per-block cover-tree forests once
     and traverses them on device (the re-plan loop reuses them)."""
-    from repro.core.distributed import systolic_nng
-    if traversal == "tree" and forest is None:
-        from repro.core.flat_tree import (build_block_forests,
-                                          stack_device_forests)
-        forest = stack_device_forests(
-            build_block_forests(np.asarray(pts), mesh.size, metric))
-    for _ in range(max_grows):
-        nbrs, cnt, ovf, skipped, dists, pruned = systolic_nng(
-            jnp.asarray(pts), float(eps), mesh, metric=metric,
-            k_cap=k_cap, prune=prune, traversal=traversal, forest=forest)
-        if not bool(np.asarray(ovf).any()):
-            return nbrs, cnt, (skipped, dists, pruned), k_cap
-        k_cap = max(2 * k_cap, int(np.asarray(cnt).max()))
-    raise RuntimeError(f"systolic overflow persists at k_cap={k_cap}")
+    from repro.nng import PointPartitionEngine, drive
+    engine = PointPartitionEngine(
+        pts, eps, mesh, metric, k_cap=k_cap, prune=prune,
+        traversal=traversal, forest=forest)
+    out, k_final, _, _ = drive(engine, max_grows=max_grows)
+    nbrs, cnt, _ovf, skipped, dists, pruned = out
+    return nbrs, cnt, (skipped, dists, pruned), k_final
 
 
 def grow_plan(plan):
     """Double every capacity knob of a LandmarkPlan (overflow re-plan)."""
-    from repro.core.distributed import LandmarkPlan
-    return LandmarkPlan(
-        m_centers=plan.m_centers,
-        cap_coal=2 * plan.cap_coal,
-        cap_ghost=2 * plan.cap_ghost,
-        g_per_pt=min(2 * plan.g_per_pt, plan.m_centers),
-        k_cap=2 * plan.k_cap,
-    )
+    from repro.nng import grow_plan as _grow
+    return _grow(plan)
 
 
 def run_landmark(pts, eps, centers, f, mesh, plan, *, metric="euclidean",
                  max_grows=6, traversal="tiles", cell=None, forest=None):
-    """Landmark engine + re-plan loop: on overflow, double all plan
-    capacities and re-run. Returns (outputs, plan) with the overflow flag
-    (outputs[6]) guaranteed False; outputs[7] / outputs[8] are the
-    per-rank tiles_skipped / tiles_scheduled counters of the grouped-tile
-    fast path and outputs[9] / outputs[10] the dists_evaluated /
-    nodes_pruned traversal counters (from the final, non-overflowing run).
+    """Landmark engine via the unified driver. Returns (outputs, plan)
+    with the overflow flag (outputs[6]) guaranteed False; outputs[7..10]
+    are the per-rank tiles_skipped / tiles_scheduled / dists_evaluated /
+    nodes_pruned counters of the final, non-overflowing run.
     ``traversal="tree"`` builds the per-cell forests once from ``cell``
     (the Voronoi assignment matching ``centers``/``f``); re-plans reuse
     them — capacities don't change the trees."""
-    from repro.core.distributed import landmark_nng
+    from repro.nng import SpatialPartitionEngine, drive
     if traversal == "tree":
         assert cell is not None, "traversal='tree' needs the cell assignment"
-        if forest is None:
-            from repro.core.flat_tree import (build_cell_forests,
-                                              stack_device_forests)
-            forest = stack_device_forests(
-                build_cell_forests(np.asarray(pts), cell, f, mesh.size,
-                                   metric))
-    for _ in range(max_grows):
-        out = landmark_nng(
-            jnp.asarray(pts), float(eps), jnp.asarray(centers),
-            jnp.asarray(f, np.int32), mesh, plan, metric=metric,
-            traversal=traversal, forest=forest, cell=cell)
-        if not bool(np.asarray(out[6]).any()):
-            return out, plan
-        plan = grow_plan(plan)
-    raise RuntimeError(f"landmark overflow persists at plan={plan}")
+    engine = SpatialPartitionEngine(
+        pts, eps, mesh, metric, traversal=traversal, centers=centers, f=f,
+        cell=cell, plan=plan, forest=forest)
+    out, plan, _, _ = drive(engine, max_grows=max_grows)
+    return out, plan
 
 
 def edges_from_neighbor_lists(ids, nbrs):
@@ -99,14 +78,18 @@ def edges_from_neighbor_lists(ids, nbrs):
 
 
 def main(argv=None):
+    from repro.core.metrics import registered_metrics
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=4096)
     ap.add_argument("--dim", type=int, default=8)
     ap.add_argument("--eps", type=float, default=1.0)
     ap.add_argument("--metric", default="euclidean",
-                    choices=["euclidean", "hamming"])
+                    choices=list(registered_metrics()))
     ap.add_argument("--algo", default="landmark",
-                    choices=["systolic", "landmark"])
+                    choices=["systolic", "landmark"],
+                    help="partition strategy: systolic = point "
+                         "partitioning, landmark = spatial partitioning")
     ap.add_argument("--k-cap", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", action="store_true")
@@ -120,92 +103,28 @@ def main(argv=None):
                          "counting pass (exact) or the host numpy pass")
     args = ap.parse_args(argv)
 
-    from repro.core.distributed import LandmarkPlan
-    from repro.core.landmark import lpt_assignment, select_centers
-    from repro.core.metrics_host import get_host_metric
     from repro.data import synthetic_pointset
     from repro.launch.mesh import make_ring_mesh
+    from repro.nng import build_nng
 
     mesh = make_ring_mesh()
-    nranks = mesh.size
-    n = (args.n // nranks) * nranks
-    pts = synthetic_pointset(n, args.dim, args.metric, seed=args.seed)
-    rng = np.random.default_rng(args.seed)
-    print(f"n={n} dim={args.dim} metric={args.metric} eps={args.eps} "
-          f"ranks={nranks} algo={args.algo}")
+    partition = "point" if args.algo == "systolic" else "spatial"
+    pts = synthetic_pointset(args.n, args.dim, args.metric, seed=args.seed)
+    print(f"n={args.n} dim={args.dim} metric={args.metric} eps={args.eps} "
+          f"ranks={mesh.size} partition={partition} "
+          f"traversal={args.traversal}")
 
-    t0 = time.time()
-    if args.algo == "systolic":
-        nbrs, cnt, counters, k_cap = run_systolic(
-            pts, args.eps, mesh, metric=args.metric, k_cap=args.k_cap,
-            prune=not args.no_prune, traversal=args.traversal)
-        jax.block_until_ready(cnt)
-        elapsed = time.time() - t0
-        src, dst = edges_from_neighbor_lists(np.arange(n), nbrs)
-        overflow = False
-        skipped, dists, pruned = counters
-        nskip = int(np.asarray(skipped).sum())
-        print(f"tiles_skipped={nskip} dists_evaluated="
-              f"{int(np.asarray(dists).sum())} nodes_pruned="
-              f"{int(np.asarray(pruned).sum())} (final k_cap={k_cap}, "
-              f"traversal={args.traversal})")
-    else:
-        met = get_host_metric(args.metric)
-        m = max(2 * nranks, 32)
-        centers_idx = select_centers(n, m, rng)
-        cpts = pts[centers_idx]
-        cell = np.argmin(np.asarray(met.cdist(pts, cpts)), axis=1)
-        sizes = np.bincount(cell, minlength=m)
-        f = lpt_assignment(sizes, nranks)
-        if args.planner == "device":
-            # ONE shard_map counting pass: exact per-(src,dst) coalesce and
-            # slacked-Lemma-1 ghost capacities (the same tests the engine
-            # applies), so the common case never re-plans
-            from repro.core.distributed import plan_landmark_device
-            plan = plan_landmark_device(
-                pts, cpts, np.asarray(f, np.int32), args.eps, mesh,
-                metric=args.metric, k_cap=args.k_cap)
-        else:
-            # host numpy pass (float64 ghost bound — may undercount the
-            # engine's slacked test; the overflow grow loop covers it)
-            from repro.core.landmark import ghost_membership
-            dmat = np.asarray(met.true(met.cdist(pts, cpts)))
-            d_pC = dmat[np.arange(n), cell]
-            gmask = ghost_membership(dmat, cell, d_pC, args.eps)
-            g_per_pt = int(gmask.sum(axis=1).max())
-            src_rank = np.repeat(np.arange(nranks), n // nranks)
-            coal = np.zeros((nranks, nranks), np.int64)
-            np.add.at(coal, (src_rank, f[cell]), 1)
-            gsrc = np.repeat(src_rank, m).reshape(n, m)[gmask]
-            gdst = np.broadcast_to(f[None, :], (n, m))[gmask]
-            gcnt = np.zeros((nranks, nranks), np.int64)
-            np.add.at(gcnt, (gsrc, gdst), 1)
-            plan = LandmarkPlan(
-                m_centers=m, cap_coal=int(coal.max()) + 8,
-                cap_ghost=int(gcnt.max()) + 8,
-                g_per_pt=max(g_per_pt, 1),
-                k_cap=args.k_cap)
-        out, plan = run_landmark(
-            pts, args.eps, cpts, f, mesh, plan, metric=args.metric,
-            traversal=args.traversal, cell=cell)
-        (Wids, wn, wc, Gids, gn, gc, ovf, tskip, tsched, dists,
-         pruned) = out
-        jax.block_until_ready(wc)
-        elapsed = time.time() - t0
-        s1, d1 = edges_from_neighbor_lists(Wids, wn)
-        s2, d2 = edges_from_neighbor_lists(Gids, gn)
-        src, dst = np.concatenate([s1, s2]), np.concatenate([d1, d2])
-        overflow = False
-        nskip = int(np.asarray(tskip).sum())
-        nsched = int(np.asarray(tsched).sum())
-        print(f"grouped tiles skipped={nskip}/{nsched} dists_evaluated="
-              f"{int(np.asarray(dists).sum())} nodes_pruned="
-              f"{int(np.asarray(pruned).sum())} "
-              f"(traversal={args.traversal}, plan={plan})")
+    g = build_nng(
+        pts, args.eps, metric=args.metric, partition=partition,
+        traversal=args.traversal, planner=args.planner, mesh=mesh,
+        k_cap=args.k_cap, prune=not args.no_prune, seed=args.seed)
+    st = g.stats
+    print(f"tiles skipped={st.tiles_skipped:.0f}/{st.tiles_scheduled:.0f} "
+          f"dists_evaluated={st.dists_evaluated:.0f} "
+          f"nodes_pruned={st.nodes_pruned:.0f} "
+          f"comm_bytes={st.total_comm_bytes:.0f} replans={st.replans}")
+    print(f"{g} in {st.elapsed_s:.2f}s (plan={g.meta['plan']})")
 
-    from repro.core.graph import EpsGraph
-    g = EpsGraph(n, src, dst)
-    print(f"{g} in {elapsed:.2f}s overflow={overflow}")
     if args.verify:
         from repro.core.brute import brute_force_graph
         from repro.core.metrics_host import get_host_metric
@@ -214,16 +133,23 @@ def main(argv=None):
             print(f"verify vs brute force: EXACT MATCH ({gb})")
         else:
             # device tiles evaluate fp32; allow only knife-edge differences
-            # (|d - eps| within fp32 BLAS3 error) — the paper's float
+            # (|d - eps| within fp32 error) — the paper's float
             # implementations have the same boundary property
             met = get_host_metric(args.metric)
+            n = g.n
             a = set(g.edge_key().tolist())
             bset = set(gb.edge_key().tolist())
             diff = np.array(sorted(a ^ bset), dtype=np.int64)
             ii, jj = diff // n, diff % n
             dd = np.asarray(met.true(met.rowwise(pts[ii], pts[jj])))
-            scale = float(np.max(np.abs(pts).astype(np.float64))) ** 2
-            tol = 1e-5 * (scale + args.eps ** 2) / max(args.eps, 1e-9)
+            if pts.dtype == np.uint32:
+                tol = 0.0            # integer distances: no fp32 boundary
+            elif args.metric == "euclidean":
+                scale = float(np.max(np.abs(pts.astype(np.float64)))) ** 2
+                tol = 1e-5 * (scale + args.eps ** 2) / max(args.eps, 1e-9)
+            else:                    # additive float metrics (L1, user)
+                scale = float(np.max(np.abs(pts.astype(np.float64))))
+                tol = 1e-5 * (scale * pts.shape[1] + args.eps) + 1e-6
             worst = float(np.max(np.abs(dd - args.eps)))
             ok = worst <= tol
             print(f"verify: {len(diff)} boundary edges, worst |d-eps|="

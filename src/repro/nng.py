@@ -1,0 +1,366 @@
+"""The public NNG front-end: ``build_nng`` — "build me the ε-graph of these
+points under this metric on this mesh".
+
+One entry point over the two device engines, with every axis a keyword:
+
+  - ``metric``     a registry name ("euclidean", "hamming", "manhattan")
+                   or a ``repro.core.metrics.Metric`` object — user-defined
+                   metrics run end-to-end, with or without Pallas kernels.
+  - ``partition``  "point" (Algorithm 4: systolic ring over point blocks)
+                   or "spatial" (Algorithms 5+6: Voronoi landmark cells
+                   with ε-ghosts).
+  - ``traversal``  "tiles" (fused bitmask distance tiles) or "tree"
+                   (device-resident cover-tree traversal).
+  - ``planner``    "device" (one exact shard_map counting pass) or "host"
+                   (numpy heuristic pass) — spatial partition only.
+
+Both engines run under ONE plan → run → grow-on-overflow driver
+(``drive``): engine-specific re-planning (k_cap growth vs ``LandmarkPlan``
+capacity doubling) sits behind the small ``Engine`` interface, so the
+overflow loop, timing, and stats plumbing exist exactly once.
+
+The result is a CSR ``NNGraph`` (symmetric adjacency + ``RunStats`` +
+provenance ``meta``) — see ``repro.core.graph``.
+
+Point counts that do not divide the mesh are handled by duplicate-padding:
+the first ``(-n) % nranks`` points are appended again. A duplicate row
+changes no true distance, its extra edges reference ids >= n and are
+dropped when the CSR is assembled — exactness is preserved for ANY metric
+(unlike far-away sentinel rows, which need metric-specific geometry).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.distributed import (LandmarkPlan, landmark_run,
+                                    make_nng_mesh, plan_landmark_device,
+                                    systolic_run)
+from repro.core.graph import NNGraph, RunStats
+from repro.core.landmark import ghost_membership, lpt_assignment, select_centers
+from repro.core.metrics import Metric, get_metric, register_metric  # noqa: F401 (re-export)
+
+__all__ = ["build_nng", "drive", "Engine", "PointPartitionEngine",
+           "SpatialPartitionEngine", "grow_plan", "Metric", "get_metric",
+           "register_metric"]
+
+
+# ---------------------------------------------------------------------------
+# the Engine interface + the ONE re-plan driver
+# ---------------------------------------------------------------------------
+
+class Engine:
+    """One distributed ε-NNG engine behind the shared driver.
+
+    Implementations hold the problem (points, eps, mesh, metric, options)
+    and expose: an initial capacity plan, one exact-or-overflowing run, the
+    overflow predicate, the grow step, and result extraction."""
+
+    name: str = "?"
+
+    def initial_plan(self):
+        raise NotImplementedError
+
+    def run(self, plan):
+        """One engine invocation under ``plan``; returns the raw outputs."""
+        raise NotImplementedError
+
+    def overflowed(self, out) -> bool:
+        raise NotImplementedError
+
+    def grow(self, plan, out):
+        """A strictly larger plan after an overflow."""
+        raise NotImplementedError
+
+    def neighbor_tables(self, out):
+        """[(ids, nbrs), ...] SENTINEL-padded tables for CSR assembly."""
+        raise NotImplementedError
+
+    def run_stats(self, out, plan) -> RunStats:
+        raise NotImplementedError
+
+
+def drive(engine: Engine, max_grows: int = 8):
+    """THE plan → run → grow-on-overflow loop (both partitions share it).
+
+    Returns (out, plan, replans, elapsed_s): the first non-overflowing
+    outputs, the plan that produced them, how many grows it took, and the
+    wall clock of that final run (earlier attempts pay compile + overflow,
+    so only the exact run is the meaningful engine time)."""
+    plan = engine.initial_plan()
+    for attempt in range(max_grows):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(engine.run(plan))
+        elapsed = time.perf_counter() - t0
+        if not engine.overflowed(out):
+            return out, plan, attempt, elapsed
+        plan = engine.grow(plan, out)
+    raise RuntimeError(
+        f"{engine.name} engine: overflow persists after {max_grows} grows "
+        f"(last plan: {plan})")
+
+
+# ---------------------------------------------------------------------------
+# point partitioning (systolic ring, Algorithm 4)
+# ---------------------------------------------------------------------------
+
+class PointPartitionEngine(Engine):
+    name = "point"
+
+    def __init__(self, points, eps, mesh, metric, *, k_cap: int = 64,
+                 prune: bool = True, traversal: str = "tiles",
+                 forest: dict | None = None, axis: str = "ring"):
+        self.metric = get_metric(metric)
+        self.points = np.asarray(points)
+        self.eps = float(eps)
+        self.mesh = mesh
+        self.k_cap = int(k_cap)
+        self.prune = prune
+        self.traversal = traversal
+        self.axis = axis
+        if traversal == "tree" and forest is None:
+            from repro.core.flat_tree import (build_block_forests,
+                                              stack_device_forests)
+            forest = stack_device_forests(build_block_forests(
+                self.points, mesh.size, self.metric.host))
+        self.forest = forest
+
+    def initial_plan(self):
+        return self.k_cap
+
+    def run(self, k_cap):
+        return systolic_run(
+            self.points, self.eps, self.mesh, metric=self.metric,
+            k_cap=k_cap, prune=self.prune, traversal=self.traversal,
+            forest=self.forest, axis=self.axis)
+
+    def overflowed(self, out):
+        return bool(np.asarray(out[2]).any())
+
+    def grow(self, k_cap, out):
+        # cnt is exact even on overflow: one grow always suffices
+        return max(2 * k_cap, int(np.asarray(out[1]).max()))
+
+    def neighbor_tables(self, out):
+        nbrs = np.asarray(out[0])
+        return [(np.arange(len(nbrs), dtype=np.int64), nbrs)]
+
+    def run_stats(self, out, k_cap) -> RunStats:
+        nranks = self.mesh.size
+        rounds = nranks // 2
+        scheduled = nranks * (rounds + 1)
+        if nranks % 2 == 0 and rounds > 0:
+            scheduled -= nranks // 2      # halving round: one side per pair
+        n, dim = self.points.shape
+        point_bytes = self.points.dtype.itemsize * dim
+        return RunStats(
+            tiles_scheduled=float(scheduled),
+            tiles_skipped=float(np.asarray(out[3]).sum()),
+            dists_evaluated=float(np.asarray(out[4]).sum()),
+            nodes_pruned=float(np.asarray(out[5]).sum()),
+            comm_bytes={"ring": float(rounds * n * point_bytes)},
+        )
+
+
+# ---------------------------------------------------------------------------
+# spatial partitioning (Voronoi landmarks + ε-ghosts, Algorithms 5 + 6)
+# ---------------------------------------------------------------------------
+
+def grow_plan(plan: LandmarkPlan) -> LandmarkPlan:
+    """Double every capacity knob of a LandmarkPlan (overflow re-plan)."""
+    return LandmarkPlan(
+        m_centers=plan.m_centers,
+        cap_coal=2 * plan.cap_coal,
+        cap_ghost=2 * plan.cap_ghost,
+        g_per_pt=min(2 * plan.g_per_pt, plan.m_centers),
+        k_cap=2 * plan.k_cap,
+    )
+
+
+class SpatialPartitionEngine(Engine):
+    name = "spatial"
+
+    def __init__(self, points, eps, mesh, metric, *, k_cap: int = 128,
+                 planner: str = "device", m_centers: int | None = None,
+                 traversal: str = "tiles", centers=None, f=None, cell=None,
+                 plan: LandmarkPlan | None = None, forest: dict | None = None,
+                 seed: int = 0, axis: str = "ring"):
+        self.metric = get_metric(metric)
+        self.points = np.asarray(points)
+        self.eps = float(eps)
+        self.mesh = mesh
+        self.k_cap = int(k_cap)
+        self.planner = planner
+        self.traversal = traversal
+        self.axis = axis
+        self.plan = plan
+        n = len(self.points)
+        nranks = mesh.size
+        met = self.metric.host
+        rng = np.random.default_rng(seed)
+        if centers is None:
+            m = m_centers or max(2 * nranks, 32)
+            centers = self.points[select_centers(n, m, rng)]
+        self.centers = np.asarray(centers)
+        self.m_centers = len(self.centers)
+        # the host (n x m) Voronoi argmin is only needed for the LPT
+        # assignment, the host planner, or tree-forest scoping — legacy
+        # tiles-flavor callers that supply (f, plan) skip it entirely
+        if cell is None and (f is None or traversal == "tree"
+                             or (plan is None and planner == "host")):
+            cell = np.argmin(met.cdist(self.points, self.centers), axis=1)
+        self.cell = None if cell is None else np.asarray(cell)
+        if f is None:
+            f = lpt_assignment(
+                np.bincount(self.cell, minlength=self.m_centers), nranks)
+        self.f = np.asarray(f, np.int32)
+        if traversal == "tree" and forest is None:
+            from repro.core.flat_tree import (build_cell_forests,
+                                              stack_device_forests)
+            forest = stack_device_forests(build_cell_forests(
+                self.points, self.cell, self.f, nranks, self.metric.host))
+        self.forest = forest
+
+    # -- planning -----------------------------------------------------------
+    def _plan_host(self) -> LandmarkPlan:
+        """Host numpy pass (float64 ghost bound — may undercount the
+        engine's slacked test; the grow loop covers the gap)."""
+        met = self.metric.host
+        n = len(self.points)
+        nranks = self.mesh.size
+        m = self.m_centers
+        dmat = np.asarray(met.true(met.cdist(self.points, self.centers)))
+        d_pC = dmat[np.arange(n), self.cell]
+        gmask = ghost_membership(dmat, self.cell, d_pC, self.eps)
+        g_per_pt = int(gmask.sum(axis=1).max())
+        src_rank = np.repeat(np.arange(nranks), n // nranks)
+        coal = np.zeros((nranks, nranks), np.int64)
+        np.add.at(coal, (src_rank, self.f[self.cell]), 1)
+        gsrc = np.repeat(src_rank, m).reshape(n, m)[gmask]
+        gdst = np.broadcast_to(self.f[None, :], (n, m))[gmask]
+        gcnt = np.zeros((nranks, nranks), np.int64)
+        np.add.at(gcnt, (gsrc, gdst), 1)
+        return LandmarkPlan(
+            m_centers=m, cap_coal=int(coal.max()) + 8,
+            cap_ghost=int(gcnt.max()) + 8, g_per_pt=max(g_per_pt, 1),
+            k_cap=self.k_cap)
+
+    def initial_plan(self) -> LandmarkPlan:
+        if self.plan is not None:
+            return self.plan
+        if self.planner == "device":
+            # ONE shard_map counting pass: exact coalesce/ghost capacities
+            # (the same tests the engine applies) — the common case never
+            # hits the grow loop
+            return plan_landmark_device(
+                self.points, self.centers, self.f, self.eps, self.mesh,
+                metric=self.metric, k_cap=self.k_cap, axis=self.axis)
+        if self.planner == "host":
+            return self._plan_host()
+        raise ValueError(f"unknown planner {self.planner!r}")
+
+    # -- engine steps -------------------------------------------------------
+    def run(self, plan):
+        return landmark_run(
+            self.points, self.eps, self.centers, self.f, self.mesh, plan,
+            metric=self.metric, traversal=self.traversal,
+            forest=self.forest, cell=self.cell, axis=self.axis)
+
+    def overflowed(self, out):
+        return bool(np.asarray(out[6]).any())
+
+    def grow(self, plan, out):
+        return grow_plan(plan)
+
+    def neighbor_tables(self, out):
+        return [(np.asarray(out[0]), np.asarray(out[1])),
+                (np.asarray(out[3]), np.asarray(out[4]))]
+
+    def run_stats(self, out, plan: LandmarkPlan) -> RunStats:
+        nranks = self.mesh.size
+        dim = self.points.shape[1]
+        row_bytes = self.points.dtype.itemsize * dim + 4 + 4  # pts + id + cell
+        lw = nranks * plan.cap_coal
+        lg = nranks * plan.cap_ghost
+        return RunStats(
+            tiles_scheduled=float(np.asarray(out[8]).sum()),
+            tiles_skipped=float(np.asarray(out[7]).sum()),
+            dists_evaluated=float(np.asarray(out[9]).sum()),
+            nodes_pruned=float(np.asarray(out[10]).sum()),
+            comm_bytes={"coalesce": float(nranks * lw * row_bytes),
+                        "ghost": float(nranks * lg * row_bytes)},
+        )
+
+
+# ---------------------------------------------------------------------------
+# the public entry point
+# ---------------------------------------------------------------------------
+
+def build_nng(
+    points,
+    eps: float,
+    *,
+    metric="euclidean",
+    partition: str = "point",
+    traversal: str = "tiles",
+    planner: str = "device",
+    mesh=None,
+    k_cap: int | None = None,
+    prune: bool = True,
+    m_centers: int | None = None,
+    seed: int = 0,
+    max_grows: int = 8,
+) -> NNGraph:
+    """Build the exact ε-neighbor graph of ``points`` under ``metric``,
+    distributed over ``mesh``. Returns a CSR ``NNGraph``.
+
+    See the module docstring for the axes. ``k_cap`` seeds the neighbor
+    list capacity (grown automatically on overflow); ``mesh`` defaults to
+    a ring over all available devices; any ``n`` is accepted (duplicate
+    padding up to the mesh size, stripped from the result).
+    """
+    met = get_metric(metric)
+    if mesh is None:
+        mesh = make_nng_mesh()
+    points = np.ascontiguousarray(np.asarray(points, met.host.dtype))
+    n = len(points)
+    if n == 0:
+        return NNGraph(0, np.zeros(1, np.int64), np.zeros(0, np.int32),
+                       meta={"metric": met.name, "eps": float(eps)})
+    pad = (-n) % mesh.size
+    if pad:
+        # duplicate-pad by cycling the input (np.resize) — works even when
+        # pad > n (tiny point sets on wide meshes)
+        run_points = np.concatenate(
+            [points, np.resize(points, (pad,) + points.shape[1:])])
+    else:
+        run_points = points
+
+    if partition == "point":
+        engine = PointPartitionEngine(
+            run_points, eps, mesh, met, k_cap=k_cap or 64, prune=prune,
+            traversal=traversal)
+    elif partition == "spatial":
+        engine = SpatialPartitionEngine(
+            run_points, eps, mesh, met, k_cap=k_cap or 128, planner=planner,
+            m_centers=m_centers, traversal=traversal, seed=seed)
+    else:
+        raise ValueError(
+            f"unknown partition {partition!r} (want 'point' or 'spatial')")
+
+    out, plan, replans, elapsed = drive(engine, max_grows=max_grows)
+    stats = engine.run_stats(out, plan)
+    stats.replans = replans
+    stats.elapsed_s = elapsed
+    meta = {
+        "metric": met.name, "eps": float(eps), "partition": partition,
+        "traversal": traversal, "nranks": mesh.size, "padded": pad,
+        "plan": plan,
+    }
+    if partition == "spatial":
+        meta["planner"] = planner
+        meta["m_centers"] = engine.m_centers
+    return NNGraph.from_neighbor_tables(
+        n, engine.neighbor_tables(out), stats=stats, meta=meta)

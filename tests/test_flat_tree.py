@@ -119,7 +119,7 @@ def test_flat_structure_invariants():
 # frontier kernel: interpret mode vs jnp oracle
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("metric", ["euclidean", "hamming"])
+@pytest.mark.parametrize("metric", ["euclidean", "hamming", "manhattan"])
 @pytest.mark.parametrize("nq,N", [(7, 32), (70, 96), (300, 544)])
 def test_tree_frontier_interpret_matches_jnp(metric, nq, N):
     import jax.numpy as jnp
@@ -127,10 +127,10 @@ def test_tree_frontier_interpret_matches_jnp(metric, nq, N):
     from repro.kernels.nng_tile import _pack_words
 
     rng = np.random.default_rng(nq + N)
-    if metric == "euclidean":
+    if metric in ("euclidean", "manhattan"):
         q = rng.normal(size=(nq, 5)).astype(np.float32)
         c = rng.normal(size=(N, 5)).astype(np.float32)
-        eps = 1.2
+        eps = 1.2 if metric == "euclidean" else 3.5
         rad = np.abs(rng.normal(size=N)).astype(np.float32) * 0.5
     else:
         q = rng.integers(0, 2**32, size=(nq, 4), dtype=np.uint32)

@@ -118,22 +118,55 @@ def test_nng_tile_hamming_fused(q, p, w, eps):
     assert (hits.astype(bool) == want).all()
 
 
+@pytest.mark.parametrize("q,p,d,eps", [
+    (128, 256, 8, 5.0), (128, 512, 16, 8.0), (256, 256, 32, 12.0),
+])
+def test_nng_tile_l1_fused(q, p, d, eps):
+    """The PR 5 registry metric's tile kernel: interpret-mode Pallas vs the
+    shared chunked-jnp oracle, plus a float64 banded oracle (no false
+    positives/negatives outside the fp32 accumulation band)."""
+    from repro.kernels.nng_tile import nng_tile_l1_pallas, nng_tile_l1_ref
+    x = RNG.normal(size=(q, d)).astype(np.float32)
+    y = RNG.normal(size=(p, d)).astype(np.float32)
+    valid = (RNG.random(p) > 0.1).astype(np.int32)
+    cnt, bits = nng_tile_l1_pallas(x, y, valid, eps, interpret=True)
+    cw, bw = nng_tile_l1_ref(x, y, valid, eps)
+    assert (np.asarray(cnt) == np.asarray(cw)).all()
+    assert (np.asarray(bits) == np.asarray(bw)).all()
+    hits = np.unpackbits(
+        np.asarray(bits).view(np.uint8), axis=1, bitorder="little")[:, :p]
+    d1 = np.abs(x.astype(np.float64)[:, None, :]
+                - y.astype(np.float64)[None, :, :]).sum(-1)
+    tol = 1e-4 * (np.abs(x).sum(-1).max() + np.abs(y).sum(-1).max())
+    want = (d1 <= eps + tol) & (valid != 0)[None, :]
+    loose = (d1 <= eps - tol) & (valid != 0)[None, :]
+    assert ((hits.astype(bool) | want) == want).all()   # no false positives*
+    assert (loose <= hits.astype(bool)).all()           # no false negatives*
+
+
 @pytest.mark.parametrize("metric,q,p,d", [
     ("euclidean", 100, 200, 7),     # row-pad both operands
     ("euclidean", 300, 515, 40),    # p not a multiple of 32
     ("euclidean", 8, 31, 3),        # tiny, heavy padding
     ("hamming", 100, 190, 5),
     ("hamming", 130, 257, 9),
+    ("manhattan", 100, 200, 7),
+    ("manhattan", 130, 257, 9),
 ])
 def test_nng_tile_bits_wrapper_padding(metric, q, p, d):
     """ops.nng_tile_bits pads internally; pad rows/cols must never leak
     into cnt or bits, and trailing bits past column p-1 must be zero."""
     from repro.kernels import nng_tile_bits
-    from repro.kernels.nng_tile import nng_tile_hamming_ref, nng_tile_ref
+    from repro.kernels.nng_tile import (nng_tile_hamming_ref, nng_tile_l1_ref,
+                                        nng_tile_ref)
     if metric == "euclidean":
         x = RNG.normal(size=(q, d)).astype(np.float32)
         y = RNG.normal(size=(p, d)).astype(np.float32)
         eps, reff = 1.5, nng_tile_ref
+    elif metric == "manhattan":
+        x = RNG.normal(size=(q, d)).astype(np.float32)
+        y = RNG.normal(size=(p, d)).astype(np.float32)
+        eps, reff = 1.0 * d, nng_tile_l1_ref
     else:
         x = RNG.integers(0, 2**32, size=(q, d), dtype=np.uint32)
         y = RNG.integers(0, 2**32, size=(p, d), dtype=np.uint32)
@@ -199,6 +232,10 @@ def _grouped_oracle(metric, x, y, xg, yg, xid, yid, eps):
         d = ((x.astype(np.float64)[:, None, :]
               - y.astype(np.float64)[None, :, :]) ** 2).sum(-1)
         ok = d <= eps ** 2
+    elif metric == "manhattan":
+        d = np.abs(x.astype(np.float64)[:, None, :]
+                   - y.astype(np.float64)[None, :, :]).sum(-1)
+        ok = d <= eps
     else:
         ok = np.bitwise_count(x[:, None, :] ^ y[None, :, :]).sum(-1) <= eps
     return (ok & (xg[:, None] == yg[None, :]) & (xg[:, None] >= 0)
@@ -208,13 +245,14 @@ def _grouped_oracle(metric, x, y, xg, yg, xid, yid, eps):
 @pytest.mark.parametrize("metric,q,p,d,eps", [
     ("euclidean", 256, 512, 16, 2.0), ("euclidean", 70, 130, 6, 2.0),
     ("euclidean", 300, 515, 40, 3.0), ("hamming", 128, 256, 8, 70),
-    ("hamming", 100, 190, 5, 60),
+    ("hamming", 100, 190, 5, 60), ("manhattan", 128, 256, 8, 5.0),
+    ("manhattan", 100, 190, 5, 4.0),
 ])
 def test_nng_tile_grouped_fused(metric, q, p, d, eps):
     """Grouped kernel (interpret) + jnp fallback vs a float64/exact oracle:
     group equality, validity (< 0), and id-inequality are all folded in."""
     from repro.kernels import nng_tile_bits_grouped
-    if metric == "euclidean":
+    if metric in ("euclidean", "manhattan"):
         x = RNG.normal(size=(q, d)).astype(np.float32)
         y = RNG.normal(size=(p, d)).astype(np.float32)
     else:

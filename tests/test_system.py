@@ -39,6 +39,15 @@ def test_nng_driver_tree_traversal_verified():
     assert g.num_edges > 0
 
 
+def test_nng_driver_manhattan_systolic():
+    """The CLI accepts any registered metric: L1 + point partitioning."""
+    from repro.launch.nng_run import main
+    g = main(["--n", "640", "--dim", "6", "--eps", "3.0",
+              "--algo", "systolic", "--metric", "manhattan", "--verify",
+              "--k-cap", "512"])
+    assert g.num_edges > 0
+
+
 def test_graph_utils():
     g1 = edges_from_pairs(10, np.array([[0, 1], [1, 0], [2, 3], [3, 3]]))
     assert g1.num_edges == 2  # dedup + self-loop dropped
