@@ -1,8 +1,10 @@
 """Benchmark harness entry: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV; the landmark-device bench also
-emits machine-readable ``BENCH_landmark.json`` (edges/s, comm bytes,
-grouped-tile skip rate, dense-vs-bitmask tile-byte accounting) so CI can
-track the perf trajectory.
+Prints ``name,us_per_call,derived`` CSV; the device benches also emit
+machine-readable JSONs so CI can track the perf trajectory:
+``BENCH_landmark.json`` (edges/s, comm bytes, grouped-tile skip rate,
+dense-vs-bitmask tile-byte accounting) and ``BENCH_systolic.json``
+(edges/s, per-channel ring bytes, double-buffered vs serial ring overlap
+A/B, and the edges/s-vs-nranks strong-scaling curve).
 
   python benchmarks/run.py                  # full sweep
   python benchmarks/run.py --only landmark  # just the landmark JSON bench

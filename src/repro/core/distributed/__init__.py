@@ -6,6 +6,7 @@ from .device import (  # noqa: F401
     make_nng_mesh,
     plan_landmark,
     plan_landmark_device,
+    plan_ring_schedule,
     systolic_nng,
     systolic_run,
     tree_traverse,

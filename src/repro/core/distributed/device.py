@@ -22,6 +22,19 @@ This is the TPU-native, *sparsity-aware* realization described in DESIGN.md
   ``lax.cond`` — only the collective-permute runs, keeping the ring flowing.
   A per-rank ``tiles_skipped`` counter reports the pruning rate.
 
+  Ring schedule: both ring bodies are double-buffered — round r+1's
+  ``ppermute`` is issued before round r's tile evaluation consumes the
+  already-received block, so the collective genuinely overlaps the kernels
+  (the reference implementation's MPI_Irecv/MPI_Isend-around-compute
+  discipline) at the cost of one extra priming hop; ``overlap=False``
+  keeps the strict rotate-then-evaluate bodies as the A/B baseline. The
+  tree flavor additionally runs a SPLIT ring schedule: per round, the host
+  planner (``plan_ring_schedule``) statically chooses between rotating the
+  levelized forest tables (dense rounds — in-tree pruning pays for the
+  ~(d+6)·L·N·4-byte hop) and rotating raw point tiles with on-the-fly
+  dense bitmask evaluation (sparse / ring-wide-skipped rounds — the
+  d·n_loc·4-byte hop is the cheapest ring-bytes schedule available).
+
 - ``landmark_nng`` — Algorithms 5 + 6. Voronoi assignment against replicated
   centers (one (n_loc × m) MXU tile), cell coalescing and ε-ghost exchange as
   capacity-padded ``jax.lax.all_to_all`` (the MPI_Alltoallv adaptation). The
@@ -69,7 +82,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map as _shard_map
 from repro.core.metrics import get_metric
 from repro.kernels import (nng_tile_bits, nng_tile_bits_grouped,
-                           nng_tile_geometry, tree_frontier_step)
+                           nng_tile_bits_pair, nng_tile_geometry,
+                           tree_frontier_step)
 from repro.kernels.nng_tile import _pack_words
 from repro.kernels.tree_frontier import _unpack_words
 from repro.kernels.ops import pallas_mode as _pallas_mode
@@ -289,7 +303,8 @@ def _round_skip_flags(x, partner, eps, *, axis, metric, prune):
     return skip.at[0].set(False)                # self tile never skipped
 
 
-def _systolic_local(x, ids, *, axis, nranks, eps, metric, k_cap, prune):
+def _systolic_local(x, ids, *, axis, nranks, eps, metric, k_cap, prune,
+                    overlap=True):
     """Per-shard body (runs under shard_map). x: (n_loc, d), ids: (n_loc,).
 
     Symmetry halving (paper §IV-C: "we therefore only need N/2 rounds"):
@@ -299,6 +314,18 @@ def _systolic_local(x, ids, *, axis, nranks, eps, metric, k_cap, prune):
     (at the boundary round of even N only the lower rank of each pair
     evaluates). The fused kernel is invoked once per direction (forward and
     mirror), each writing only its bitmask + counts to HBM.
+
+    Double buffering (``overlap=True``): each loop iteration issues the
+    ``ppermute`` that feeds round r+1 BEFORE evaluating round r's block, so
+    the collective shares no data dependency with the tile kernels and the
+    scheduler can genuinely run them concurrently — the reference
+    implementation's MPI_Irecv/MPI_Isend-around-compute discipline. The
+    pipeline is primed with one extra hop before the loop (the round-0 self
+    tile overlaps it), and the mirror accumulator rides one hop BEHIND the
+    block: its permute is issued in the same iteration that merges into it,
+    so it too overlaps the kernels. ``overlap=False`` keeps the strict
+    rotate-then-evaluate schedule (every hop serializes ahead of its tile)
+    as the A/B baseline for the bench.
 
     Relies on block-contiguous global ids (``ids = arange(n)`` sharded along
     the ring), so a visiting block is fully described by its first id.
@@ -328,33 +355,52 @@ def _systolic_local(x, ids, *, axis, nranks, eps, metric, k_cap, prune):
     def tile_bits(a, b):
         return nng_tile_bits(a, b, ones, eps, metric=metric)
 
-    def step(r, carry):
+    # the WHOLE tile evaluation — kernel, id extraction, merge — sits
+    # inside a cond so a pruned round costs only the permutes
+    def _eval_pair(y, yid0, acc):
+        nbrs_, cnt_, ynbrs_, ycnt_ = acc
+        fc, fb = tile_bits(x, y)     # visiting pts near my rows
+        rc, rb = tile_bits(y, x)     # my pts near visiting rows (mirror)
+        cnt_ = cnt_ + fc
+        nbrs_ = _merge_ids(nbrs_, _bits_to_ids(fb, yid0, k_cap))
+        ycnt_ = ycnt_ + rc
+        ynbrs_ = _merge_ids(ynbrs_, _bits_to_ids(rb, id0, k_cap))
+        return nbrs_, cnt_, ynbrs_, ycnt_
+
+    def step_serial(r, carry):
+        # strict rotate-then-evaluate: round r's tile waits on round r's hop
         y, yid0, ynbrs, ycnt, nbrs, cnt = carry
-        # rotate the visiting block + its mirror accumulator (overlapped by
-        # XLA with the tile kernel — the paper's send/recv-compute overlap)
         y = jax.lax.ppermute(y, axis, perm)
         yid0 = jax.lax.ppermute(yid0, axis, perm)
         ynbrs = jax.lax.ppermute(ynbrs, axis, perm)
         ycnt = jax.lax.ppermute(ycnt, axis, perm)
-
-        # the WHOLE tile evaluation — kernel, id extraction, merge — sits
-        # inside the cond so a pruned round costs only the permutes
-        def _eval(acc):
-            nbrs_, cnt_, ynbrs_, ycnt_ = acc
-            fc, fb = tile_bits(x, y)     # visiting pts near my rows
-            rc, rb = tile_bits(y, x)     # my pts near visiting rows (mirror)
-            cnt_ = cnt_ + fc
-            nbrs_ = _merge_ids(nbrs_, _bits_to_ids(fb, yid0, k_cap))
-            ycnt_ = ycnt_ + rc
-            ynbrs_ = _merge_ids(ynbrs_, _bits_to_ids(rb, id0, k_cap))
-            return nbrs_, cnt_, ynbrs_, ycnt_
-
         nbrs, cnt, ynbrs, ycnt = jax.lax.cond(
-            do_eval[r], _eval, lambda acc: acc, (nbrs, cnt, ynbrs, ycnt))
+            do_eval[r], lambda acc: _eval_pair(y, yid0, acc),
+            lambda acc: acc, (nbrs, cnt, ynbrs, ycnt))
         return y, yid0, ynbrs, ycnt, nbrs, cnt
+
+    def step_overlap(r, carry):
+        # double-buffered: the carry block already ARRIVED (hop issued last
+        # iteration / pre-loop); issue hop r+1 first, then evaluate round r
+        # — permute and kernels are dependency-free, so they overlap
+        y, yid0, ynbrs, ycnt, nbrs, cnt = carry
+        y_next = jax.lax.ppermute(y, axis, perm)
+        yid_next = jax.lax.ppermute(yid0, axis, perm)
+        # mirror accumulator rides one hop behind the block: permuted here,
+        # merged by this round's eval (also overlaps the kernels)
+        ynbrs = jax.lax.ppermute(ynbrs, axis, perm)
+        ycnt = jax.lax.ppermute(ycnt, axis, perm)
+        nbrs, cnt, ynbrs, ycnt = jax.lax.cond(
+            do_eval[r], lambda acc: _eval_pair(y, yid0, acc),
+            lambda acc: acc, (nbrs, cnt, ynbrs, ycnt))
+        return y_next, yid_next, ynbrs, ycnt, nbrs, cnt
 
     nbrs0 = jnp.full((n_loc, k_cap), SENTINEL, dtype=jnp.int32)
     cnt0 = jnp.zeros((n_loc,), dtype=jnp.int32)
+    if overlap and rounds > 0:
+        # prime the pipeline: hop 1 in flight while the self tile runs below
+        y1 = jax.lax.ppermute(x, axis, perm)
+        yid1 = jax.lax.ppermute(id0, axis, perm)
     # self tile (round 0): clear the diagonal bit (row i, column i) and take
     # counts from the cleared bitmask — structurally excludes self pairs
     # even when fp32 rounding pushes d(x, x) past eps.
@@ -367,8 +413,13 @@ def _systolic_local(x, ids, *, axis, nranks, eps, metric, k_cap, prune):
     cnt = _popcount_rows(bits0)
     nbrs = _merge_ids(nbrs0, _bits_to_ids(bits0, id0, k_cap))
     if rounds > 0:
-        _, _, ynbrs, ycnt, nbrs, cnt = jax.lax.fori_loop(
-            1, rounds + 1, step, (x, id0, nbrs0, cnt0, nbrs, cnt))
+        if overlap:
+            _, _, ynbrs, ycnt, nbrs, cnt = jax.lax.fori_loop(
+                1, rounds + 1, step_overlap,
+                (y1, yid1, nbrs0, cnt0, nbrs, cnt))
+        else:
+            _, _, ynbrs, ycnt, nbrs, cnt = jax.lax.fori_loop(
+                1, rounds + 1, step_serial, (x, id0, nbrs0, cnt0, nbrs, cnt))
         # each block's mirror accumulator sits `rounds` hops downstream of
         # its home rank; one permute returns it
         perm_home = [(i, (i + rounds) % nranks) for i in range(nranks)]
@@ -388,7 +439,9 @@ def _systolic_local(x, ids, *, axis, nranks, eps, metric, k_cap, prune):
 
 def _systolic_local_tree(x, ids, *forest_arrays, axis, nranks, eps, metric,
                          k_cap, prune):
-    """Per-shard systolic body, cover-tree traversal flavor.
+    """Per-shard systolic body, cover-tree traversal flavor — SERIAL
+    schedule (``overlap=False``; ``_systolic_local_tree_split`` is the
+    double-buffered production body).
 
     The levelized forest tables describe THIS rank's block tree (built once
     host-side by ``flat_tree.build_block_forests``). They rotate around the
@@ -397,7 +450,8 @@ def _systolic_local_tree(x, ids, *forest_arrays, axis, nranks, eps, metric,
     block's tree (forward edges) and the visiting points query my tree
     (mirror accumulator) — so the in-tree triangle-inequality prune now
     fires *inside* every ring tile. Block-summary pruning still skips whole
-    rounds above it.
+    rounds above it. Every hop here serializes ahead of its evaluation —
+    this body exists as the A/B baseline for the overlap bench.
     """
     n_loc = x.shape[0]
     forest = DeviceForest(*[a[0] for a in forest_arrays])   # drop rank dim
@@ -461,6 +515,190 @@ def _systolic_local_tree(x, ids, *forest_arrays, axis, nranks, eps, metric,
             pruned[None])
 
 
+def _systolic_local_tree_split(x, ids, *forest_arrays, axis, nranks, eps,
+                               metric, k_cap, prune, ring_modes):
+    """Per-shard systolic body, tree flavor: double-buffered ring with the
+    SPLIT ring schedule (``overlap=True``, the production tree body).
+
+    ``ring_modes[r - 1]`` statically selects what round r rotates. It is
+    planned host-side (``plan_ring_schedule``) from the same block-summary
+    table the device prune uses, and is uniform across ranks — a collective
+    permute is global, so every rank must agree on what a hop carries:
+
+    - ``"forest"``: the visiting block's levelized cover-tree tables jump
+      to their round-r position in ONE ``ppermute`` (a multi-hop shift when
+      intervening rounds rotated points only, so skipped rounds never pay
+      forest bytes) and the forward direction runs the level-synchronous
+      traversal against them. Wins on dense rounds, where in-tree pruning
+      amortizes the ~(d+6)·L·N·4-byte hop.
+    - ``"points"``: only the raw point tile + its id vector rotate
+      (d·n_loc·4 bytes/hop) and an evaluated tile falls back to the fused
+      dense bitmask kernel pair (``nng_tile_bits_pair``). Wins when the
+      summary table says the round is sparse or skipped ring-wide — the
+      cheapest ring-bytes schedule available.
+
+    The loop is unrolled over rounds = nranks // 2 (each round may carry a
+    different payload, so the body is not ``fori_loop``-uniform), issuing
+    round r+1's permutes before round r's evaluation exactly like the tiles
+    flavor: collectives overlap the traversal / tile kernels. The mirror
+    traversal always queries the LOCAL forest, so only the forward
+    direction ever needs the rotated tables. Mirror accumulators rotate one
+    hop behind the block and return home via the final shift-``rounds``
+    permute. Exactness is schedule-independent: dense tiles and the
+    cover-tree traversal emit identical edge sets in the declared fp32
+    arithmetic, so the mode choice moves bytes and FLOPs, never edges.
+    """
+    n_loc = x.shape[0]
+    forest = DeviceForest(*[a[0] for a in forest_arrays])   # drop rank dim
+    perm = [(i, (i - 1) % nranks) for i in range(nranks)]
+    me = jax.lax.axis_index(axis)
+    rounds = nranks // 2
+    assert len(ring_modes) == rounds, (ring_modes, rounds)
+    qcells = jnp.zeros((n_loc,), jnp.int32)
+    id0 = ids[0]
+
+    rr = jnp.arange(rounds + 1)
+    partner = (me + rr) % nranks
+    skip = _round_skip_flags(x, partner, eps,
+                             axis=axis, metric=metric, prune=prune)
+    if nranks % 2 == 0 and rounds > 0:
+        sched = jnp.where(rr == rounds, me < partner, True)
+    else:
+        sched = jnp.ones((rounds + 1,), bool)
+    do_eval = sched & ~skip
+    tiles_skipped = jnp.sum((sched & skip).astype(jnp.float32))
+
+    def trav(qp, qids, fr):
+        return tree_traverse(qp, qids, qcells, fr, eps, k_cap, metric)
+
+    def rot(a):
+        return jax.lax.ppermute(a, axis, perm)
+
+    nbrs0 = jnp.full((n_loc, k_cap), SENTINEL, dtype=jnp.int32)
+    cnt0 = jnp.zeros((n_loc,), dtype=jnp.int32)
+    if rounds > 0:
+        # prime round 1's payloads; the round-0 self traversal overlaps them
+        y = rot(x)
+        yids = rot(ids)
+        vforest, vpos = forest, 0
+        if ring_modes[0] == "forest":
+            vforest = jax.tree.map(rot, forest)
+            vpos = 1
+    # round 0 (self tile): one traversal of my own tree; the global-id
+    # inequality inside tree_traverse excludes self pairs structurally
+    nbrs, cnt, dists, pruned = trav(x, ids, forest)
+    ynbrs, ycnt = nbrs0, cnt0
+
+    for r in range(1, rounds + 1):
+        y_cur, yids_cur, vf_cur = y, yids, vforest
+        if r < rounds:
+            # issue round r+1's payloads before this round's evaluation
+            y = rot(y_cur)
+            yids = rot(yids_cur)
+            if ring_modes[r] == "forest":
+                # jump the forest from its last rotated position straight
+                # to round r+1 — one collective, one hop's bytes
+                jump = (r + 1) - vpos
+                pjump = [(i, (i - jump) % nranks) for i in range(nranks)]
+                vforest = jax.tree.map(
+                    lambda a: jax.lax.ppermute(a, axis, pjump), vforest)
+                vpos = r + 1
+        # mirror accumulator: one hop behind the block, merged by this
+        # round's eval — its permute overlaps the kernels too
+        ynbrs = rot(ynbrs)
+        ycnt = rot(ycnt)
+
+        if ring_modes[r - 1] == "forest":
+            def _eval(acc):
+                nbrs_, cnt_, ynbrs_, ycnt_, d_, p_ = acc
+                fn, fc, fd, fp = trav(x, ids, vf_cur)     # vs visiting tree
+                rn, rc, rd, rp = trav(y_cur, yids_cur, forest)    # mirror
+                return (_merge_ids(nbrs_, fn), cnt_ + fc,
+                        _merge_ids(ynbrs_, rn), ycnt_ + rc,
+                        d_ + fd + rd, p_ + fp + rp)
+        else:
+            def _eval(acc):
+                nbrs_, cnt_, ynbrs_, ycnt_, d_, p_ = acc
+                fc, fb, rc, rb = nng_tile_bits_pair(x, y_cur, eps,
+                                                    metric=metric)
+                nbrs_ = _merge_ids(nbrs_, _bits_to_ids(fb, yids_cur[0],
+                                                       k_cap))
+                ynbrs_ = _merge_ids(ynbrs_, _bits_to_ids(rb, id0, k_cap))
+                return (nbrs_, cnt_ + fc, ynbrs_, ycnt_ + rc,
+                        d_ + jnp.float32(float(n_loc) * float(n_loc)), p_)
+        nbrs, cnt, ynbrs, ycnt, dists, pruned = jax.lax.cond(
+            do_eval[r], _eval, lambda acc: acc,
+            (nbrs, cnt, ynbrs, ycnt, dists, pruned))
+
+    if rounds > 0:
+        perm_home = [(i, (i + rounds) % nranks) for i in range(nranks)]
+        ynbrs = jax.lax.ppermute(ynbrs, axis, perm_home)
+        ycnt = jax.lax.ppermute(ycnt, axis, perm_home)
+        nbrs = _merge_ids(nbrs, ynbrs)
+        cnt = cnt + ycnt
+    overflow = jnp.any(cnt > k_cap)[None]
+    return (nbrs, cnt, overflow, tiles_skipped[None], dists[None],
+            pruned[None])
+
+
+def plan_ring_schedule(points, nranks: int, eps: float, *,
+                       metric="euclidean", prune: bool = True,
+                       dense_frac: float = 0.5) -> tuple:
+    """Host-side split-ring planner: one ``"forest"``/``"points"`` mode per
+    ring round (length nranks // 2), from the same block summaries the
+    device prune uses.
+
+    For each round r it replays the device schedule — partner = (me + r) %
+    nranks, the even-nranks halving round evaluated only by the lower rank
+    of each pair, the summary-distance skip test with the identical inexact-
+    metric slack — and counts how many ranks would actually evaluate their
+    tile. If more than ``dense_frac`` of the scheduled tiles evaluate, the
+    round is dense and rotating the forest tables pays for itself
+    (``"forest"``); otherwise only raw point tiles rotate and the few
+    evaluating ranks fall back to the dense bitmask kernel (``"points"``).
+
+    The choice is purely a bytes/FLOPs trade: the device's own per-rank
+    skip flags stay authoritative for correctness, so a knife-edge
+    disagreement between this host replay and the fp32 device test can
+    only mis-cost a round, never mis-classify an edge. With ``prune=False``
+    every tile evaluates, so every round plans ``"forest"`` — matching the
+    pre-split behavior.
+    """
+    met = get_metric(metric)
+    rounds = nranks // 2
+    if rounds == 0:
+        return ()
+    pts = jnp.asarray(np.asarray(points), met.dtype)
+    n = pts.shape[0]
+    assert n % nranks == 0, (n, nranks)
+    n_loc = n // nranks
+    summaries = [met.summary(pts[j * n_loc:(j + 1) * n_loc])
+                 for j in range(nranks)]
+    call = jnp.stack([c for c, _ in summaries])
+    radall = np.asarray(jnp.stack([r for _, r in summaries]), np.float64)
+    # dcc[j, p] = summary distance from block j's center to block p's
+    dcc = np.stack([np.asarray(met.summary_dist(call, call[j]), np.float64)
+                    for j in range(nranks)])
+    modes = []
+    for r in range(1, rounds + 1):
+        evals = scheduled = 0
+        for j in range(nranks):
+            p = (j + r) % nranks
+            if nranks % 2 == 0 and r == rounds and not j < p:
+                continue                      # halving round: upper half idle
+            scheduled += 1
+            if prune:
+                bound = radall[j] + radall[p] + eps
+                if not met.exact:
+                    bound = bound * (1.0 + 1e-5) + 1e-6
+                if dcc[j, p] > bound:
+                    continue
+            evals += 1
+        modes.append("forest" if evals > dense_frac * scheduled
+                     else "points")
+    return tuple(modes)
+
+
 def make_nng_mesh(nranks: int | None = None) -> Mesh:
     devs = np.asarray(jax.devices())
     if nranks is not None:
@@ -473,7 +711,7 @@ _N_FOREST = len(DeviceForest._fields)
 
 @functools.lru_cache(maxsize=64)
 def _systolic_fn(mesh, eps, metric, k_cap, axis, prune, pallas_mode,
-                 traversal):
+                 traversal, overlap=True, ring_modes=None):
     """Memoized jitted shard_map program: rebuilding the closure per call
     defeats the jit cache (every invocation would retrace + recompile, and
     compile dominates wall clock on re-plan loops / benchmarks). Mesh and
@@ -485,17 +723,27 @@ def _systolic_fn(mesh, eps, metric, k_cap, axis, prune, pallas_mode,
     the env mid-process would silently reuse a program traced under the
     old mode. ``traversal`` selects the dense-tile vs cover-tree body
     (different arities); forest table SHAPES are not part of the key — jit
-    retraces per shape as usual."""
+    retraces per shape as usual. ``overlap`` picks double-buffered vs
+    serial ring bodies, and ``ring_modes`` (a per-round "forest"/"points"
+    tuple from ``plan_ring_schedule``, tree + overlap only) is static
+    because every round's rotating payload must be known at trace time —
+    a different schedule IS a different program."""
     nranks = mesh.shape[axis]
     if traversal == "tree":
-        body = functools.partial(
-            _systolic_local_tree, axis=axis, nranks=nranks, eps=eps,
-            metric=metric, k_cap=k_cap, prune=prune)
+        if overlap:
+            body = functools.partial(
+                _systolic_local_tree_split, axis=axis, nranks=nranks,
+                eps=eps, metric=metric, k_cap=k_cap, prune=prune,
+                ring_modes=ring_modes)
+        else:
+            body = functools.partial(
+                _systolic_local_tree, axis=axis, nranks=nranks, eps=eps,
+                metric=metric, k_cap=k_cap, prune=prune)
         in_specs = (P(axis, None), P(axis)) + (P(axis),) * _N_FOREST
     else:
         body = functools.partial(
             _systolic_local, axis=axis, nranks=nranks, eps=eps,
-            metric=metric, k_cap=k_cap, prune=prune)
+            metric=metric, k_cap=k_cap, prune=prune, overlap=overlap)
         in_specs = (P(axis, None), P(axis))
     return jax.jit(_shard_map(
         body, mesh,
@@ -516,6 +764,8 @@ def systolic_run(
     prune: bool = True,
     traversal: str = "tiles",
     forest: dict | None = None,
+    overlap: bool = True,
+    ring_schedule: tuple | None = None,
 ):
     """Distributed exact ε-NNG via the sparsity-aware systolic ring.
 
@@ -524,6 +774,14 @@ def systolic_run(
     (``forest`` = rank-stacked tables from ``flat_tree.build_block_forests``
     + ``stack_device_forests``) so the triangle-inequality prune fires
     inside every tile, not just at block granularity.
+
+    ``overlap=True`` (default) runs the double-buffered ring: each round's
+    ``ppermute`` is issued before the previous round's tile is evaluated,
+    so comm genuinely overlaps compute (one extra priming hop on the tiles
+    flavor). The tree flavor additionally runs the split ring schedule —
+    ``ring_schedule`` is the per-round ``"forest"``/``"points"`` mode tuple
+    (computed via ``plan_ring_schedule`` when None). ``overlap=False``
+    keeps the strict rotate-then-evaluate bodies for A/B timing.
 
     Returns (nbrs, cnt, overflow, tiles_skipped, dists_evaluated,
     nodes_pruned):
@@ -547,8 +805,13 @@ def systolic_run(
     n, _ = points.shape
     assert n % nranks == 0, (n, nranks)
     ids = jnp.arange(n, dtype=jnp.int32)
+    if traversal == "tree" and overlap and ring_schedule is None:
+        ring_schedule = plan_ring_schedule(points, nranks, float(eps),
+                                           metric=metric, prune=prune)
+    ring_modes = (tuple(ring_schedule)
+                  if traversal == "tree" and overlap else None)
     fn = _systolic_fn(mesh, float(eps), met, k_cap, axis, prune,
-                      _pallas_mode(), traversal)
+                      _pallas_mode(), traversal, overlap, ring_modes)
     points = jnp.asarray(points, met.dtype)
     if traversal == "tree":
         assert forest is not None, "traversal='tree' needs stacked forests"

@@ -203,9 +203,10 @@ class EpsGraph:
         )
 
     def symmetric_difference(self, other: "EpsGraph") -> int:
-        a = set(self.edge_key().tolist())
-        b = set(other.edge_key().tolist())
-        return len(a ^ b)
+        # edge_key() is sorted-unique by construction, so the array path
+        # applies directly — no Python-set round trip boxing every key
+        return int(np.setxor1d(self.edge_key(), other.edge_key(),
+                               assume_unique=True).size)
 
     def __repr__(self):
         return f"EpsGraph(n={self.n}, edges={self.num_edges}, avg_deg={self.avg_degree:.2f})"

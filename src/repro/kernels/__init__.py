@@ -3,6 +3,7 @@ from .ops import (  # noqa: F401
     grouped_block_active,
     nng_tile_bits,
     nng_tile_bits_grouped,
+    nng_tile_bits_pair,
     nng_tile_geometry,
     pairwise_hamming,
     pairwise_sqdist,

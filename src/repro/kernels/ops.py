@@ -173,6 +173,26 @@ def nng_tile_bits(x, y, y_valid, eps: float, metric="euclidean"):
     return cnt[:q], bits[:q, :nw]
 
 
+def nng_tile_bits_pair(x, y, eps: float, metric="euclidean"):
+    """Fused forward + mirror ε-NNG tile pair for one systolic ring round.
+
+    The dense-round fallback of the tree flavor's split ring schedule: a
+    round that rotates raw point tiles instead of forest tables still needs
+    BOTH edge directions when its tile evaluates (the symmetry-halved ring
+    emits forward edges for the local block and mirror edges for the
+    visiting one). Returns ``(fcnt, fbits, rcnt, rbits)`` — the forward
+    tile ``nng_tile_bits(x, y)`` and the mirror tile ``nng_tile_bits(y,
+    x)`` with every row valid. Two kernel launches over shared operands
+    (the scheduler is free to fuse or overlap them); no dense distance
+    tile reaches HBM on either direction.
+    """
+    fcnt, fbits = nng_tile_bits(
+        x, y, jnp.ones((y.shape[0],), jnp.int32), eps, metric=metric)
+    rcnt, rbits = nng_tile_bits(
+        y, x, jnp.ones((x.shape[0],), jnp.int32), eps, metric=metric)
+    return fcnt, fbits, rcnt, rbits
+
+
 @functools.partial(
     jax.jit, static_argnames=("fn", "eps", "tq", "tp", "interpret"))
 def _grouped_padded_call(x, y, xg, yg, xid, yid, *, fn, eps, tq, tp,

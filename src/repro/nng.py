@@ -37,7 +37,7 @@ import numpy as np
 
 from repro.core.distributed import (LandmarkPlan, landmark_run,
                                     make_nng_mesh, plan_landmark_device,
-                                    systolic_run)
+                                    plan_ring_schedule, systolic_run)
 from repro.core.graph import NNGraph, RunStats
 from repro.core.landmark import ghost_membership, lpt_assignment, select_centers
 from repro.core.metrics import Metric, get_metric, register_metric  # noqa: F401 (re-export)
@@ -82,19 +82,31 @@ class Engine:
         raise NotImplementedError
 
 
-def drive(engine: Engine, max_grows: int = 8):
+def drive(engine: Engine, max_grows: int = 8, *, steady_state: bool = True):
     """THE plan → run → grow-on-overflow loop (both partitions share it).
 
     Returns (out, plan, replans, elapsed_s): the first non-overflowing
     outputs, the plan that produced them, how many grows it took, and the
-    wall clock of that final run (earlier attempts pay compile + overflow,
-    so only the exact run is the meaningful engine time)."""
+    STEADY-STATE wall clock of that final configuration. Every grow changes
+    a static capacity knob, so the winning run is always a freshly traced +
+    compiled program — its first invocation conflates compile with
+    execution. The winner is therefore invoked a second time (a jit cache
+    hit) and THAT wall clock is reported: ``RunStats.elapsed_s`` and both
+    bench JSONs measure engine execution, never compilation.
+
+    ``steady_state=False`` skips the timing re-run and reports the warm
+    (compile-inclusive) wall clock — for callers that only consume the
+    neighbor tables, where doubling the winning run buys nothing."""
     plan = engine.initial_plan()
     for attempt in range(max_grows):
         t0 = time.perf_counter()
-        out = jax.block_until_ready(engine.run(plan))
+        out = jax.block_until_ready(engine.run(plan))  # warm: trace+compile
         elapsed = time.perf_counter() - t0
         if not engine.overflowed(out):
+            if steady_state:
+                t0 = time.perf_counter()
+                out = jax.block_until_ready(engine.run(plan))
+                elapsed = time.perf_counter() - t0
             return out, plan, attempt, elapsed
         plan = engine.grow(plan, out)
     raise RuntimeError(
@@ -111,7 +123,8 @@ class PointPartitionEngine(Engine):
 
     def __init__(self, points, eps, mesh, metric, *, k_cap: int = 64,
                  prune: bool = True, traversal: str = "tiles",
-                 forest: dict | None = None, axis: str = "ring"):
+                 forest: dict | None = None, axis: str = "ring",
+                 overlap: bool = True):
         self.metric = get_metric(metric)
         self.points = np.asarray(points)
         self.eps = float(eps)
@@ -120,12 +133,20 @@ class PointPartitionEngine(Engine):
         self.prune = prune
         self.traversal = traversal
         self.axis = axis
+        self.overlap = bool(overlap)
         if traversal == "tree" and forest is None:
             from repro.core.flat_tree import (build_block_forests,
                                               stack_device_forests)
             forest = stack_device_forests(build_block_forests(
                 self.points, mesh.size, self.metric.host))
         self.forest = forest
+        # the split ring schedule is static (part of the compiled program),
+        # so plan it once per engine — the grow loop only changes k_cap
+        self.ring_schedule = None
+        if traversal == "tree" and self.overlap:
+            self.ring_schedule = plan_ring_schedule(
+                self.points, mesh.size, self.eps, metric=self.metric,
+                prune=self.prune)
 
     def initial_plan(self):
         return self.k_cap
@@ -134,7 +155,8 @@ class PointPartitionEngine(Engine):
         return systolic_run(
             self.points, self.eps, self.mesh, metric=self.metric,
             k_cap=k_cap, prune=self.prune, traversal=self.traversal,
-            forest=self.forest, axis=self.axis)
+            forest=self.forest, axis=self.axis, overlap=self.overlap,
+            ring_schedule=self.ring_schedule)
 
     def overflowed(self, out):
         return bool(np.asarray(out[2]).any())
@@ -147,20 +169,61 @@ class PointPartitionEngine(Engine):
         nbrs = np.asarray(out[0])
         return [(np.arange(len(nbrs), dtype=np.int64), nbrs)]
 
+    def _ring_comm_bytes(self, k_cap: int) -> dict:
+        """Per-channel ring bytes, counting EVERY array that actually
+        rotates (summed over ranks for the full run; hop counts mirror the
+        device schedules in ``device.py`` exactly):
+
+        - ``ring_points``: the visiting block each hop — point rows plus
+          the block-id payload (one int32 ``id0`` scalar on the tiles
+          flavor, the (n_loc,) id vector on the tree flavor). Double
+          buffering pays one extra priming hop on the tiles flavor; the
+          tree flavors make exactly ``rounds`` point hops.
+        - ``ring_forest`` (tree only): the levelized forest tables — every
+          hop on the serial schedule, one jump-permute per "forest"-mode
+          round on the split schedule (a jump costs one hop's bytes no
+          matter how many positions it covers).
+        - ``ring_mirror``: the visiting block's neighbor accumulator
+          ((n_loc, k_cap) ids + (n_loc,) counts) — ``rounds`` in-loop hops
+          plus the final shift-``rounds`` return home.
+        """
+        nranks = self.mesh.size
+        rounds = nranks // 2
+        if rounds == 0:
+            return {"ring_points": 0.0, "ring_mirror": 0.0}
+        n, dim = self.points.shape
+        n_loc = n // nranks
+        item = self.points.dtype.itemsize
+        mirror_hop = n_loc * k_cap * 4 + n_loc * 4
+        bytes_ = {"ring_mirror": float(nranks * (rounds + 1) * mirror_hop)}
+        if self.traversal == "tree":
+            pt_hop = n_loc * dim * item + n_loc * 4
+            bytes_["ring_points"] = float(nranks * rounds * pt_hop)
+            forest_hop = sum(
+                np.asarray(v).nbytes for v in self.forest.values()) / nranks
+            if self.overlap:
+                fhops = sum(m == "forest" for m in self.ring_schedule)
+            else:
+                fhops = rounds
+            bytes_["ring_forest"] = float(nranks * fhops * forest_hop)
+        else:
+            pt_hop = n_loc * dim * item + 4
+            hops = rounds + 1 if self.overlap else rounds
+            bytes_["ring_points"] = float(nranks * hops * pt_hop)
+        return bytes_
+
     def run_stats(self, out, k_cap) -> RunStats:
         nranks = self.mesh.size
         rounds = nranks // 2
         scheduled = nranks * (rounds + 1)
         if nranks % 2 == 0 and rounds > 0:
             scheduled -= nranks // 2      # halving round: one side per pair
-        n, dim = self.points.shape
-        point_bytes = self.points.dtype.itemsize * dim
         return RunStats(
             tiles_scheduled=float(scheduled),
             tiles_skipped=float(np.asarray(out[3]).sum()),
             dists_evaluated=float(np.asarray(out[4]).sum()),
             nodes_pruned=float(np.asarray(out[5]).sum()),
-            comm_bytes={"ring": float(rounds * n * point_bytes)},
+            comm_bytes=self._ring_comm_bytes(k_cap),
         )
 
 
@@ -231,10 +294,18 @@ class SpatialPartitionEngine(Engine):
         n = len(self.points)
         nranks = self.mesh.size
         m = self.m_centers
+        if n % nranks != 0:
+            raise ValueError(
+                f"points are not shardable: n={n} is not divisible by the "
+                f"mesh size {nranks} — pad to a multiple (build_nng's "
+                f"duplicate padding does this automatically)")
         dmat = np.asarray(met.true(met.cdist(self.points, self.centers)))
         d_pC = dmat[np.arange(n), self.cell]
         gmask = ghost_membership(dmat, self.cell, d_pC, self.eps)
         g_per_pt = int(gmask.sum(axis=1).max())
+        # row-to-rank map of the block-sharded input: exactly n // nranks
+        # rows per rank (np.repeat with a scalar count would silently DROP
+        # the remainder rows if the divisibility check above were absent)
         src_rank = np.repeat(np.arange(nranks), n // nranks)
         coal = np.zeros((nranks, nranks), np.int64)
         np.add.at(coal, (src_rank, self.f[self.cell]), 1)
@@ -312,6 +383,7 @@ def build_nng(
     m_centers: int | None = None,
     seed: int = 0,
     max_grows: int = 8,
+    overlap: bool = True,
 ) -> NNGraph:
     """Build the exact ε-neighbor graph of ``points`` under ``metric``,
     distributed over ``mesh``. Returns a CSR ``NNGraph``.
@@ -319,7 +391,10 @@ def build_nng(
     See the module docstring for the axes. ``k_cap`` seeds the neighbor
     list capacity (grown automatically on overflow); ``mesh`` defaults to
     a ring over all available devices; any ``n`` is accepted (duplicate
-    padding up to the mesh size, stripped from the result).
+    padding up to the mesh size, stripped from the result). ``overlap``
+    (point partition only) selects the double-buffered systolic ring —
+    ``False`` falls back to the strict rotate-then-evaluate schedule, kept
+    for A/B timing.
     """
     met = get_metric(metric)
     if mesh is None:
@@ -341,7 +416,7 @@ def build_nng(
     if partition == "point":
         engine = PointPartitionEngine(
             run_points, eps, mesh, met, k_cap=k_cap or 64, prune=prune,
-            traversal=traversal)
+            traversal=traversal, overlap=overlap)
     elif partition == "spatial":
         engine = SpatialPartitionEngine(
             run_points, eps, mesh, met, k_cap=k_cap or 128, planner=planner,
@@ -359,6 +434,10 @@ def build_nng(
         "traversal": traversal, "nranks": mesh.size, "padded": pad,
         "plan": plan,
     }
+    if partition == "point":
+        meta["overlap"] = bool(overlap)
+        if engine.ring_schedule is not None:
+            meta["ring_schedule"] = tuple(engine.ring_schedule)
     if partition == "spatial":
         meta["planner"] = planner
         meta["m_centers"] = engine.m_centers

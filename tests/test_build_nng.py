@@ -60,6 +60,30 @@ def test_nngraph_from_neighbor_tables():
     assert g.meta["metric"] == "euclidean"
 
 
+def test_symmetric_difference_matches_set_semantics():
+    """The np.setxor1d fast path must return exactly what the old
+    Python-set xor did, for disjoint, overlapping, identical, and empty
+    edge sets."""
+    from repro.core.graph import EpsGraph
+    n = 50
+    rng = np.random.default_rng(3)
+
+    def rand_graph(m):
+        src = rng.integers(0, n, m)
+        dst = (src + 1 + rng.integers(0, n - 1, m)) % n
+        return EpsGraph(n, src, dst)
+
+    empty = EpsGraph(n, np.array([], np.int64), np.array([], np.int64))
+    a, b = rand_graph(40), rand_graph(40)
+    ka = set(a.edge_key().tolist())
+    kb = set(b.edge_key().tolist())
+    assert a.symmetric_difference(b) == len(ka ^ kb)
+    assert b.symmetric_difference(a) == len(ka ^ kb)
+    assert a.symmetric_difference(a) == 0
+    assert a.symmetric_difference(empty) == len(ka)
+    assert empty.symmetric_difference(empty) == 0
+
+
 # ---------------------------------------------------------------------------
 # deprecated tuple APIs: warn, delegate, identical outputs
 # ---------------------------------------------------------------------------
@@ -274,8 +298,16 @@ st = g.stats
 assert st.tiles_skipped > 0, "blocked clusters must prune ring tiles"
 assert st.tiles_scheduled > st.tiles_skipped
 assert st.dists_evaluated > 0 and st.nodes_pruned == 0
-assert st.comm_bytes["ring"] == 4 * 2048 * pts.dtype.itemsize * pts.shape[1]
+# per-channel ring bytes (double-buffered tiles flavor at 8 ranks:
+# rounds + 1 = 5 point hops incl. the priming hop, rounds + 1 mirror hops
+# incl. the return home), analytic formula per rank summed over ranks
+n_loc = 2048 // 8
+pt_hop = n_loc * pts.shape[1] * pts.dtype.itemsize + 4
+assert st.comm_bytes["ring_points"] == 8 * 5 * pt_hop
+assert st.comm_bytes["ring_mirror"] == 8 * 5 * (n_loc * 512 * 4 + n_loc * 4)
+assert set(st.comm_bytes) == {"ring_points", "ring_mirror"}
 assert not st.overflow and st.replans == 0 and st.elapsed_s > 0
+assert g.meta["overlap"] is True and "ring_schedule" not in g.meta
 
 g2 = build_nng(pts, 1.0, partition="spatial", traversal="tree", k_cap=512)
 st2 = g2.stats

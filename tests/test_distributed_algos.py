@@ -493,3 +493,128 @@ def test_landmark_device_parity_8dev():
     g_per_pt / cap_ghost overflow -> grow_plan re-plan path."""
     out = run_subprocess(_LANDMARK_PARITY_CODE, devices=8, timeout=1200)
     assert "LANDMARK_PARITY_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# odd / non-power-of-two meshes: halving schedule, perm_home, ring bytes
+# ---------------------------------------------------------------------------
+
+_MESH_PARITY_CODE = r"""
+import numpy as np, jax
+from repro.core.brute import brute_force_graph
+from repro.core.distributed import make_nng_mesh
+from repro.core.flat_tree import build_block_forests, stack_device_forests
+from repro.core.graph import NNGraph
+from repro.core.metrics_host import get_host_metric
+from repro.data import synthetic_pointset
+from repro.nng import (PointPartitionEngine, SpatialPartitionEngine,
+                       build_nng, drive)
+
+nranks = len(jax.devices())
+n, dim = 600, 6          # divisible by 3, 5, 6 — no duplicate padding
+pts = synthetic_pointset(n, dim, "euclidean", seed=17)
+
+def gap_safe_eps(pts, target=1.0):
+    d2 = ((pts[:, None, :].astype(np.float64)
+           - pts[None, :, :].astype(np.float64)) ** 2).sum(-1)
+    vals = np.sort(np.sqrt(d2[np.triu_indices(n, 1)]))
+    i = int(np.searchsorted(vals, target))
+    lo, hi = max(i - 2000, 0), min(i + 2000, len(vals) - 1)
+    j = lo + int(np.argmax(vals[lo + 1:hi + 1] - vals[lo:hi]))
+    assert vals[j + 1] - vals[j] > 1e-5, "no safe gap near target"
+    return float(0.5 * (vals[j] + vals[j + 1]))
+
+eps = gap_safe_eps(pts)
+gb = brute_force_graph(pts, eps)   # float64 oracle
+
+rounds = nranks // 2
+n_loc = n // nranks
+forest = stack_device_forests(build_block_forests(
+    pts, nranks, get_host_metric("euclidean")))
+forest_hop = sum(np.asarray(v).nbytes for v in forest.values()) / nranks
+
+for traversal in ("tiles", "tree"):
+    for overlap in (True, False):
+        g = build_nng(pts, eps, partition="point", traversal=traversal,
+                      k_cap=256, overlap=overlap)
+        assert g == gb, (traversal, overlap, nranks)
+        st, k_fin = g.stats, g.meta["plan"]
+        assert st.elapsed_s > 0 and st.replans == 0
+        # analytic per-channel ring-byte formulas (see nng.py docstring)
+        mirror = nranks * (rounds + 1) * (n_loc * k_fin * 4 + n_loc * 4)
+        assert st.comm_bytes["ring_mirror"] == mirror, (traversal, overlap)
+        if traversal == "tiles":
+            hops = rounds + 1 if overlap else rounds
+            assert st.comm_bytes["ring_points"] == \
+                nranks * hops * (n_loc * dim * 4 + 4), (overlap, nranks)
+            assert "ring_forest" not in st.comm_bytes
+        else:
+            assert st.comm_bytes["ring_points"] == \
+                nranks * rounds * (n_loc * dim * 4 + n_loc * 4)
+            if overlap:
+                modes = g.meta["ring_schedule"]
+                assert len(modes) == rounds
+                fhops = sum(m == "forest" for m in modes)
+            else:
+                fhops = rounds
+            assert st.comm_bytes["ring_forest"] == \
+                nranks * fhops * forest_hop, (overlap, nranks)
+
+# forced split schedules: exactness must be schedule-independent, and a
+# "points"->"forest" transition exercises the multi-hop forest jump permute
+mesh = make_nng_mesh()
+if rounds > 0:
+    for sched in {("points",) * rounds,
+                  ("points",) * (rounds - 1) + ("forest",)}:
+        eng = PointPartitionEngine(pts, eps, mesh, "euclidean", k_cap=256,
+                                   traversal="tree")
+        eng.ring_schedule = sched
+        out, plan, _, _ = drive(eng)
+        g = NNGraph.from_neighbor_tables(n, eng.neighbor_tables(out))
+        assert g == gb, (sched, nranks)
+
+# spatial partition at the same mesh sizes (all_to_all + ghosts, not ring)
+g = build_nng(pts, eps, partition="spatial", traversal="tiles", k_cap=256)
+assert g == gb, ("spatial", nranks)
+
+# non-shardable n must raise a clear error from the host planner (the
+# device path asserts divisibility; build_nng duplicate-pads around both)
+bad = synthetic_pointset(nranks * 7 + 1, 4, "euclidean", seed=3)
+eng = SpatialPartitionEngine(bad, 1.0, mesh, "euclidean", planner="host")
+try:
+    eng.initial_plan()
+    raise SystemExit("expected ValueError for non-shardable n")
+except ValueError as e:
+    assert "shardable" in str(e), e
+print("MESH_PARITY_OK")
+"""
+
+
+@pytest.mark.parametrize("devices", [3, 5, 6])
+def test_device_parity_and_ring_bytes_meshes(devices):
+    """The halving-round schedule and perm_home return hop at odd and
+    non-power-of-two mesh sizes (both parities of nranks), double-buffered
+    AND serial ring bodies, exact vs float64 brute force — plus the
+    per-channel ring-byte counters against the analytic formulas, forced
+    split schedules (incl. the multi-hop forest jump), and the
+    non-shardable-n host-planner error."""
+    out = run_subprocess(_MESH_PARITY_CODE, devices=devices, timeout=1200)
+    assert "MESH_PARITY_OK" in out
+
+
+def test_plan_ring_schedule_heuristic():
+    """Host split-ring planner: far-apart blocked clusters make every
+    cross-block round sparse -> "points" mode; prune=False evaluates every
+    scheduled tile -> all "forest" (the pre-split behavior); nranks=1 has
+    no ring."""
+    from repro.core.distributed import plan_ring_schedule
+    from repro.data import blocked_clusters
+    pts = blocked_clusters(1600, 4, 8, seed=4)
+    modes = plan_ring_schedule(pts, 8, 1.0)
+    assert len(modes) == 4 and set(modes) <= {"forest", "points"}
+    assert all(m == "points" for m in modes), modes
+    assert plan_ring_schedule(pts, 8, 1.0, prune=False) == ("forest",) * 4
+    assert plan_ring_schedule(pts, 1, 1.0) == ()
+    # overlapping uniform data: every round dense -> forest everywhere
+    dense = synthetic_pointset(800, 4, "euclidean", seed=1)
+    assert plan_ring_schedule(dense, 8, 1.0) == ("forest",) * 4
