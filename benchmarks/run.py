@@ -2,9 +2,11 @@
 Prints ``name,us_per_call,derived`` CSV; the device benches also emit
 machine-readable JSONs so CI can track the perf trajectory:
 ``BENCH_landmark.json`` (edges/s, comm bytes, grouped-tile skip rate,
-dense-vs-bitmask tile-byte accounting) and ``BENCH_systolic.json``
+dense-vs-bitmask tile-byte accounting), ``BENCH_systolic.json``
 (edges/s, per-channel ring bytes, double-buffered vs serial ring overlap
-A/B, and the edges/s-vs-nranks strong-scaling curve).
+A/B, and the edges/s-vs-nranks strong-scaling curve), and
+``BENCH_forest_build.json`` (host vs on-device forest-construction wall
+clock; both engine JSONs also carry ``build_s`` + the same A/B entry).
 
   python benchmarks/run.py                  # full sweep
   python benchmarks/run.py --only landmark  # just the landmark JSON bench
@@ -33,6 +35,8 @@ def main(argv=None) -> None:
                     help="output path for the landmark perf JSON")
     ap.add_argument("--systolic-json", default="BENCH_systolic.json",
                     help="output path for the systolic perf JSON")
+    ap.add_argument("--forest-json", default="BENCH_forest_build.json",
+                    help="output path for the forest-build perf JSON")
     args = ap.parse_args(argv)
 
     from benchmarks import tables
@@ -47,6 +51,8 @@ def main(argv=None) -> None:
          lambda: tables.bench_landmark_device(args.landmark_json)),
         ("systolic_device",                               # systolic fast path
          lambda: tables.bench_systolic_device(args.systolic_json)),
+        ("forest_build_device",                           # on-device builder
+         lambda: tables.bench_forest_build(args.forest_json)),
         ("distance_kernels", tables.bench_distance_kernels),  # kernel layer
     ]
     selected = [(n, f) for n, f in benches

@@ -7,9 +7,10 @@ Datasets are synthetic stand-ins matched to Table I characteristics
 Also a CLI: ``python benchmarks/tables.py --check NEW.json --prev PREV.json``
 compares fresh bench JSONs against the previous CI run's artifacts and
 fails on a >2× regression in edges/s, the tile/node skip rates, the ring
-overlap speedup, or the scaling-curve throughput — and on a >2× GROWTH of
-the total ring bytes (lower-is-better). Degrades to a warning when no
-history exists.
+overlap speedup, the scaling-curve throughput, or the host/device
+forest-build speedup — and on a >2× GROWTH of the total ring bytes or the
+device forest-build seconds (``build_s``, lower-is-better). Degrades to a
+warning when no history exists.
 """
 from __future__ import annotations
 
@@ -188,6 +189,63 @@ def bench_block_pruning():
              f";edges={g.num_edges}")
 
 
+# -- forest construction: host oracle vs on-device builder ------------------
+def _forest_build_ab(host_fn, dev_fn, reps=3):
+    """Warm host-vs-device forest-build A/B: seconds per build.
+
+    The host path (numpy covertree + flatten) is timed as-is; the device
+    path (jit batch builder) is warmed first so the number is steady-state
+    build throughput, not trace+compile."""
+    import jax
+
+    host_s, _ = _time(host_fn)
+    dev = lambda: jax.block_until_ready(list(dev_fn().values()))
+    dev()                                      # trace + compile + regrow
+    dev_s, _ = _time(dev, reps=reps)
+    return {"host_s": round(host_s, 4), "device_s": round(dev_s, 4),
+            "speedup_x": round(host_s / max(dev_s, 1e-9), 2)}
+
+
+def bench_forest_build(json_path: str = "BENCH_forest_build.json"):
+    """Forest-construction micro-bench on corel-like data: host (numpy
+    covertree + ``flatten_forest``) vs on-device (jit ``flat_tree_device``
+    batch builder) wall clock per point count. The JSON's top-level
+    ``build_s`` (device, largest n) is trend-gated lower-is-better; the
+    device path is expected to beat the host baseline even on the CPU jnp
+    fallback (the host build is Python-loop bound)."""
+    import json
+
+    import jax
+
+    from repro.core.flat_tree import build_block_forests, stack_device_forests
+    from repro.kernels.ops import pallas_mode
+
+    nranks = len(jax.devices())
+    d = DATASETS["corel-like"]
+    rows = []
+    for n in (1024, 2048, 4096):
+        pts = synthetic_pointset(n, d["dim"], "euclidean", seed=1)
+        ab = _forest_build_ab(
+            lambda: stack_device_forests(build_block_forests(pts, nranks)),
+            lambda: build_block_forests(pts, nranks, backend="device"))
+        rows.append({"n": n, **ab})
+        emit(f"forest-build-device/n={n}/ranks={nranks}",
+             ab["device_s"] * 1e6,
+             f"host_us={ab['host_s'] * 1e6:.1f};speedup={ab['speedup_x']}x")
+    res = {
+        "workload": {"name": "corel-like", "dim": d["dim"],
+                     "metric": "euclidean", "nranks": nranks},
+        "pallas_mode": pallas_mode(),
+        "build_s": rows[-1]["device_s"],
+        "host_build_s": rows[-1]["host_s"],
+        "forest_build": rows[-1],
+        "sweep": rows,
+    }
+    with open(json_path, "w") as fh:
+        json.dump(res, fh, indent=1)
+    return res
+
+
 # -- landmark device engine: perf trajectory (machine-readable) -------------
 def bench_landmark_device(json_path: str = "BENCH_landmark.json"):
     """Landmark DEVICE engine on the available mesh: edges/s, all_to_all
@@ -232,24 +290,24 @@ def bench_landmark_device(json_path: str = "BENCH_landmark.json"):
 
     def timed(traversal):
         from repro.nng import SpatialPartitionEngine, drive
-        forest = None
-        if traversal == "tree":
-            from repro.core.flat_tree import (build_cell_forests,
-                                              stack_device_forests)
-            forest = stack_device_forests(
-                build_cell_forests(pts, cell, f, nranks))
         # drive() warms the winning program (trace + compile + any grow)
         # and times a second, jit-cached invocation — elapsed is
         # steady-state engine throughput (the number CI's trend check
-        # gates on), measured in exactly one place for every bench
+        # gates on), measured in exactly one place for every bench; the
+        # tree path lets the engine build its forest on device
         eng = SpatialPartitionEngine(
             pts, eps, mesh, "euclidean", k_cap=128, traversal=traversal,
-            centers=cpts, f=f, cell=cell, plan=plan, forest=forest)
+            centers=cpts, f=f, cell=cell, plan=plan,
+            forest_backend="device")
         out, p, _, dt = drive(eng, max_grows=10)
         return out, p, dt
 
     out, plan, dt = timed("tiles")
     out_tree, _, dt_tree = timed("tree")
+    from repro.core.flat_tree import build_cell_forests, stack_device_forests
+    forest_ab = _forest_build_ab(
+        lambda: stack_device_forests(build_cell_forests(pts, cell, f, nranks)),
+        lambda: build_cell_forests(pts, cell, f, nranks, backend="device"))
     s1, d1 = edges_from_neighbor_lists(out[0], out[1])
     s2, d2 = edges_from_neighbor_lists(out[3], out[4])
     g = EpsGraph(n, _np.concatenate([s1, s2]), _np.concatenate([d1, d2]))
@@ -292,6 +350,10 @@ def bench_landmark_device(json_path: str = "BENCH_landmark.json"):
         "pallas_mode": pallas_mode(),
         "edges": g.num_edges,
         "elapsed_s": round(dt, 4),
+        # forest-construction wall clock (warm device build), reported
+        # SEPARATELY from elapsed_s, with the host-baseline A/B alongside
+        "build_s": forest_ab["device_s"],
+        "forest_build": forest_ab,
         "edges_per_s": round(g.num_edges / max(dt, 1e-9), 1),
         "comm_bytes": comm,
         "tiles": {"scheduled": scheduled, "skipped": skipped,
@@ -363,6 +425,10 @@ def bench_systolic_device(json_path: str = "BENCH_systolic.json"):
     g, dt = timed("tiles")
     g_tree, dt_tree = timed("tree")
     assert g_tree == g, "tree vs tiles traversal edge mismatch"
+    from repro.core.flat_tree import build_block_forests, stack_device_forests
+    forest_ab = _forest_build_ab(
+        lambda: stack_device_forests(build_block_forests(pts, nranks)),
+        lambda: build_block_forests(pts, nranks, backend="device"))
     g_ser, dt_ser = timed("tiles", overlap=False)
     assert g_ser == g, "serial vs double-buffered ring edge mismatch"
     st, st_tree = g.stats, g_tree.stats
@@ -383,6 +449,10 @@ def bench_systolic_device(json_path: str = "BENCH_systolic.json"):
         "pallas_mode": pallas_mode(),
         "edges": g.num_edges,
         "elapsed_s": round(dt, 4),
+        # forest-construction wall clock (warm device build, the backend
+        # the tree path above actually ran with), SEPARATE from elapsed_s
+        "build_s": forest_ab["device_s"],
+        "forest_build": forest_ab,
         "edges_per_s": round(g.num_edges / max(dt, 1e-9), 1),
         # per-channel ring bytes of what actually rotates (points + id
         # payload, forest tables, mirror accumulators) — see
@@ -437,6 +507,8 @@ TREND_METRICS = (
     ("overlap.speedup_x", True),
     ("scaling_edges_per_s_max_ranks", True),
     ("ring_bytes_total", False),
+    ("build_s", False),                 # warm device forest build seconds
+    ("forest_build.speedup_x", True),   # host / device build-time ratio
 )
 
 

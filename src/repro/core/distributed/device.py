@@ -9,10 +9,11 @@ This is the TPU-native, *sparsity-aware* realization described in DESIGN.md
   computed in VMEM on the MXU, thresholded there, and only a bit-packed
   adjacency mask (n_loc × n_loc/32 uint32, 128× smaller than the fp32
   distance tile) plus exact per-row counts reach HBM. Neighbor ids are then
-  extracted from the bitmask by a two-level selection (``_bits_to_ids``):
-  pick the k lowest-indexed nonzero words per row, unpack only those, and
-  top_k the candidates — never sorting an n_loc² array. The fp32 distance
-  tile is never materialized in HBM on this path.
+  extracted by the fused bitmask→ids epilogue kernel
+  (``repro.kernels.bits_epilogue`` via ``ops.bits_to_ids``): output slots
+  are ranked directly from word popcounts in VMEM — no ``top_k`` pass and
+  no sort ever touch an n_loc² array. The fp32 distance tile is never
+  materialized in HBM on this path.
 
   Block-summary pruning (the paper's sparsity claim): each shard computes a
   bounding center + radius for its block once up front and all-gathers the
@@ -49,9 +50,10 @@ This is the TPU-native, *sparsity-aware* realization described in DESIGN.md
   the kernel (group [min, max] range disjointness over the sorted buffers),
   reported per rank via ``tiles_skipped`` / ``tiles_scheduled`` counters
   like the systolic engine's. Neighbor ids are recovered from the bitmask
-  by the same two-level extraction as the ring path (``_bits_to_cols`` +
-  a gather through the cell-sorted id table), and the Lemma-1 ghost test
-  carries a scale-aware fp32 slack so boundary ghosts are never dropped.
+  by the same fused epilogue as the ring path (``ops.bits_to_gathered_ids``
+  — rank-select in VMEM, then a gather through the cell-sorted id table),
+  and the Lemma-1 ghost test carries a scale-aware fp32 slack so boundary
+  ghosts are never dropped.
 
 Everything is shape-static: neighbor lists are (·, K) id arrays padded with
 INT32_MAX, counts are exact, and overflow flags report capacity misses so the
@@ -87,6 +89,13 @@ from repro.kernels import (nng_tile_bits, nng_tile_bits_grouped,
 from repro.kernels.nng_tile import _pack_words
 from repro.kernels.tree_frontier import _unpack_words
 from repro.kernels.ops import pallas_mode as _pallas_mode
+# fused bitmask→ids epilogues (repro.kernels.bits_epilogue): rank-selection
+# over word popcounts in VMEM replaces the old two-pass ``lax.top_k``
+# extraction — same contract (k smallest hit columns/ids, ascending,
+# padded), bit-identical output, no dense candidate array
+from repro.kernels.ops import (bits_to_ids as _bits_to_ids,
+                               bits_to_gathered_ids as _bits_to_gathered_ids,
+                               leaf_range_pack as _leaf_range_pack)
 
 SENTINEL = jnp.int32(2**31 - 1)
 
@@ -134,66 +143,6 @@ def _merge_ids(buf, new_ids):
     return jnp.sort(cat, axis=-1)[..., :k]
 
 
-_NOCOL = jnp.int32(2**30)       # "no set bit" column sentinel
-
-
-def _bits_to_cols(bits, k):
-    """Vectorized bitmask -> k lowest set-bit columns (ascending, padded
-    with ``_NOCOL``).
-
-    bits: (m, W) uint32 packed hit masks (little-endian; column c of the
-    tile is word c // 32, bit c % 32).
-
-    Two-level selection avoids an O(m·n log n) sort over the full tile:
-    the k lowest set-bit columns of a row lie inside its k lowest-indexed
-    NONZERO words, so we top_k over the (m, W) word-occupancy map (32×
-    smaller than the tile), gather + unpack only those k words, and top_k
-    the resulting 32k candidate columns.
-    """
-    m, W = bits.shape
-    kw = min(k, W)
-    wid = jnp.where(bits != 0, jnp.arange(W, dtype=jnp.int32)[None, :],
-                    jnp.int32(W))
-    nwid, _ = jax.lax.top_k(-wid, kw)          # kw smallest word indices
-    widx = -nwid                               # (m, kw); W == "no word"
-    words = jnp.take_along_axis(bits, jnp.minimum(widx, W - 1), axis=1)
-    words = jnp.where(widx < W, words, jnp.uint32(0))
-    bitpos = jnp.arange(32, dtype=jnp.uint32)
-    set_ = ((words[:, :, None] >> bitpos[None, None, :]) & 1) == 1
-    cols = widx[:, :, None] * 32 + bitpos.astype(jnp.int32)[None, None, :]
-    cand = jnp.where(set_, cols, _NOCOL).reshape(m, kw * 32)
-    c = kw * 32
-    if k >= c:
-        out = jnp.sort(cand, axis=-1)
-        if k > c:
-            pad = jnp.full((m, k - c), _NOCOL, dtype=out.dtype)
-            out = jnp.concatenate([out, pad], axis=-1)
-        return out
-    top, _ = jax.lax.top_k(-cand, k)           # ascending cand
-    return -top
-
-
-def _bits_to_ids(bits, id0, k):
-    """Bitmask -> k-smallest hit ids (sorted, SENTINEL-padded) when the id
-    of column c is ``id0 + c`` (block-contiguous ids, systolic path)."""
-    cols = _bits_to_cols(bits, k)
-    return jnp.where(cols < _NOCOL, id0 + cols, SENTINEL)
-
-
-def _bits_to_gathered_ids(bits, ids_row, k):
-    """Bitmask -> hit ids for ARBITRARY per-column ids (landmark path:
-    columns are cell-sorted coalesce-buffer rows, so ids are scattered).
-
-    Gathers ``ids_row`` at the k lowest set-bit columns, then sorts each
-    row ascending so the output is canonical (sorted ids, SENTINEL-padded)
-    exactly like the dense-mask extraction it replaces. Exact whenever the
-    row's popcount <= k — which overflow detection (cnt > k_cap) already
-    guarantees before results are trusted."""
-    cols = _bits_to_cols(bits, k)
-    p = ids_row.shape[0]
-    g = jnp.where(cols < p, jnp.take(ids_row, jnp.minimum(cols, p - 1)),
-                  SENTINEL)
-    return jnp.sort(g, axis=-1)
 
 
 def _popcount_rows(bits):
@@ -259,11 +208,10 @@ def tree_traverse(qp, qids, qcells, forest: DeviceForest, eps, k_cap: int,
           forest.parent, forest.leaf_lo, forest.leaf_hi)
     (_, delta, dists, pruned), _ = jax.lax.scan(
         body, (ones, delta0, jnp.float32(0), jnp.float32(0)), xs)
-    cover = jnp.cumsum(delta, axis=1)[:, :n_leaf] > 0
-    cover = cover & (forest.leaf_ids != SENTINEL)[None, :]
-    cover = cover & (qids[:, None] != forest.leaf_ids[None, :])
-    cnt = jnp.sum(cover.astype(jnp.int32), axis=1)
-    bits = _pack_words(cover)
+    # fused leaf-range pack: prefix-sum the ±1 deltas, apply the cover /
+    # validity / self-pair tests and pack to words in one kernel — the
+    # dense (nq, n_leaf) cover mask never reaches HBM
+    cnt, bits = _leaf_range_pack(delta, forest.leaf_ids, qids)
     nbrs = _bits_to_gathered_ids(bits, forest.leaf_ids, k_cap)
     return nbrs, cnt, dists, pruned
 
@@ -711,7 +659,8 @@ _N_FOREST = len(DeviceForest._fields)
 
 @functools.lru_cache(maxsize=64)
 def _systolic_fn(mesh, eps, metric, k_cap, axis, prune, pallas_mode,
-                 traversal, overlap=True, ring_modes=None):
+                 traversal, overlap=True, ring_modes=None,
+                 forest_backend="host"):
     """Memoized jitted shard_map program: rebuilding the closure per call
     defeats the jit cache (every invocation would retrace + recompile, and
     compile dominates wall clock on re-plan loops / benchmarks). Mesh and
@@ -727,7 +676,11 @@ def _systolic_fn(mesh, eps, metric, k_cap, axis, prune, pallas_mode,
     serial ring bodies, and ``ring_modes`` (a per-round "forest"/"points"
     tuple from ``plan_ring_schedule``, tree + overlap only) is static
     because every round's rotating payload must be known at trace time —
-    a different schedule IS a different program."""
+    a different schedule IS a different program. ``forest_backend``
+    ("host"/"device", tree only) keys the provenance of the forest tables:
+    the two builders agree on shapes for the same input, so sharing a
+    program between them would be shape-safe, but a distinct key keeps
+    host-vs-device A/B timings from poisoning each other's jit caches."""
     nranks = mesh.shape[axis]
     if traversal == "tree":
         if overlap:
@@ -766,6 +719,7 @@ def systolic_run(
     forest: dict | None = None,
     overlap: bool = True,
     ring_schedule: tuple | None = None,
+    forest_backend: str = "host",
 ):
     """Distributed exact ε-NNG via the sparsity-aware systolic ring.
 
@@ -811,7 +765,8 @@ def systolic_run(
     ring_modes = (tuple(ring_schedule)
                   if traversal == "tree" and overlap else None)
     fn = _systolic_fn(mesh, float(eps), met, k_cap, axis, prune,
-                      _pallas_mode(), traversal, overlap, ring_modes)
+                      _pallas_mode(), traversal, overlap, ring_modes,
+                      forest_backend)
     points = jnp.asarray(points, met.dtype)
     if traversal == "tree":
         assert forest is not None, "traversal='tree' needs stacked forests"
@@ -1141,6 +1096,7 @@ def landmark_run(
     traversal: str = "tiles",
     forest: dict | None = None,
     cell=None,
+    forest_backend: str = "host",
 ):
     """Distributed landmark ε-NNG (collective ghosts). Returns
     (Wids, nbrs, cnt, Gids, gnbrs, gcnt, overflow, tiles_skipped,
@@ -1166,7 +1122,7 @@ def landmark_run(
     assert n % nranks == 0, (n, nranks)
     ids = jnp.arange(n, dtype=jnp.int32)
     fn = _landmark_fn(mesh, float(eps), met, plan, axis, _pallas_mode(),
-                      traversal)
+                      traversal, forest_backend)
     points = jnp.asarray(points, met.dtype)
     centers = jnp.asarray(centers, met.dtype)
     f = jnp.asarray(f, jnp.int32)
@@ -1193,11 +1149,11 @@ def landmark_nng(points, eps, centers, f, mesh, plan, **kw):
 
 @functools.lru_cache(maxsize=64)
 def _landmark_fn(mesh, eps, metric, plan, axis, pallas_mode,
-                 traversal="tiles"):
+                 traversal="tiles", forest_backend="host"):
     """Memoized jitted shard_map program (see ``_systolic_fn``, including
-    the ``pallas_mode`` key); the frozen ``LandmarkPlan`` is the static
-    capacity key, so only genuine re-plans (grown capacities) pay a
-    recompile."""
+    the ``pallas_mode`` and ``forest_backend`` keys); the frozen
+    ``LandmarkPlan`` is the static capacity key, so only genuine re-plans
+    (grown capacities) pay a recompile."""
     nranks = mesh.shape[axis]
     body = functools.partial(
         _landmark_local, axis=axis, nranks=nranks, eps=eps,

@@ -95,9 +95,16 @@ class FlatCoverTree:
     def level_width(self) -> int:
         return self.node_gid.shape[1]
 
+    def __post_init__(self) -> None:
+        # packed-bitmask consumers rely on these paddings; check once here
+        # instead of per kernel call
+        assert self.node_gid.shape[1] % 32 == 0, self.node_gid.shape
+        assert self.leaf_ids.shape[0] % 32 == 0, self.leaf_ids.shape
+        self._n_leaf = int(np.sum(self.leaf_ids != SENTINEL_ID))
+
     @property
     def num_leaves(self) -> int:        # true leaf count (un-padded)
-        return int(np.sum(self.leaf_ids != SENTINEL_ID))
+        return self._n_leaf
 
     # -- host query (Alg. 3 over the flat tables) --------------------------
     def query_host(
@@ -298,14 +305,24 @@ def flatten_covertree(tree: "CoverTree") -> FlatCoverTree:
 
 def build_block_forests(
     points: np.ndarray, nranks: int, metric: str = "euclidean",
-    leaf_size: int = 10,
-) -> list[FlatCoverTree]:
+    leaf_size: int = 10, *, backend: str = "host",
+):
     """Systolic engine: one flat tree per equal contiguous block (rank).
 
     Global ids are the block rows' global indices; every node carries cell
     id 0 (no group scoping on the ring path). ``len(points)`` must divide
     evenly (the engine's contract).
+
+    ``backend="host"`` (the float64 oracle) returns the per-rank
+    ``FlatCoverTree`` list; ``backend="device"`` runs the jit builder in
+    ``flat_tree_device`` and returns the stacked device-tables dict
+    directly (what ``stack_device_forests`` yields from the host list).
     """
+    if backend == "device":
+        from .flat_tree_device import build_block_forests_device
+
+        return build_block_forests_device(points, nranks, metric, leaf_size)
+    assert backend == "host", backend
     from .covertree import build_covertree
 
     n = len(points)
@@ -324,14 +341,23 @@ def build_block_forests(
 
 def build_cell_forests(
     points: np.ndarray, cell: np.ndarray, f: np.ndarray, nranks: int,
-    metric: str = "euclidean", leaf_size: int = 10,
-) -> list[FlatCoverTree]:
+    metric: str = "euclidean", leaf_size: int = 10, *, backend: str = "host",
+):
     """Landmark engine: per rank, a forest of per-cell cover trees over the
     cells LPT-assigned to it (``f``: cell -> rank). Nodes carry their cell
     id so a traversal scopes queries to their own cell — the cells ARE the
     level-1 cover (PR 2's framing), and the per-cell trees are the in-cell
     levels below it.
+
+    ``backend`` as in ``build_block_forests``: "host" returns the
+    ``FlatCoverTree`` list, "device" the stacked device-tables dict.
     """
+    if backend == "device":
+        from .flat_tree_device import build_cell_forests_device
+
+        return build_cell_forests_device(points, cell, f, nranks, metric,
+                                         leaf_size)
+    assert backend == "host", backend
     from .covertree import build_covertree
 
     f = np.asarray(f)

@@ -40,6 +40,9 @@ class RunStats:
     overflow: bool = False         # final run overflowed (never via drivers)
     replans: int = 0               # overflow -> grow iterations taken
     elapsed_s: float = 0.0         # wall clock of the final (exact) run
+    build_s: float = 0.0           # forest-construction wall clock (tree
+                                   # traversal only; 0.0 on tile paths —
+                                   # reported SEPARATELY from elapsed_s)
 
     @property
     def total_comm_bytes(self) -> float:

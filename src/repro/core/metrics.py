@@ -60,6 +60,11 @@ class Metric:
     tile_p: int = 512
     # comparable -> true distance on device (None = identity fp32 cast)
     true_device: Callable | None = None
+    # row-aligned TRUE distance, (n, d), (n, d) -> (n,) fp32 — the on-device
+    # forest builder's distance primitive. Diff-form arithmetic where the
+    # metric allows it (no BLAS3 cancellation: builder radii stay ulp-exact
+    # at any coordinate scale); None = generic per-row cdist fallback
+    rowwise: Callable | None = None
     # fused bitmask tile kernel (systolic): pallas + jnp-oracle pair
     tile_pallas: Callable | None = None
     tile_ref: Callable | None = None
@@ -88,6 +93,14 @@ class Metric:
         if self.true_device is not None:
             return self.true_device(c)
         return jnp.asarray(c, jnp.float32)
+
+    def rowwise_true(self, x, y):
+        """Row-aligned true distances (the builder primitive); generic
+        fallback evaluates ``cdist`` one aligned row pair at a time."""
+        if self.rowwise is not None:
+            return self.rowwise(x, y)
+        f = lambda a, b: self.true(self.cdist(a[None, :], b[None, :]))[0, 0]
+        return jax.vmap(f)(x, y)
 
     def tile_shape(self, q: int, p: int) -> tuple[int, int]:
         tq = self.tile_q if q >= self.tile_q else _round_up(max(q, 1), 8)
@@ -197,6 +210,22 @@ def _euclidean_ghost_slack(x, centers, tru, bound):
             + jnp.float32(1e-5) * bound + jnp.float32(1e-6))
 
 
+def _euclidean_rowwise(x, y):
+    diff = jnp.asarray(x, jnp.float32) - jnp.asarray(y, jnp.float32)
+    return jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+
+
+def _hamming_rowwise(x, y):
+    xor = jnp.bitwise_xor(x, y)
+    return jnp.sum(jax.lax.population_count(xor).astype(jnp.int32),
+                   axis=-1).astype(jnp.float32)
+
+
+def _l1_rowwise(x, y):
+    return jnp.sum(jnp.abs(jnp.asarray(x, jnp.float32)
+                           - jnp.asarray(y, jnp.float32)), axis=-1)
+
+
 def _hamming_cdist(x, y):
     xor = jnp.bitwise_xor(x[:, None, :], y[None, :, :])
     return jnp.sum(jax.lax.population_count(xor).astype(jnp.int32),
@@ -218,6 +247,7 @@ def _register_builtins() -> None:
         host=get_host_metric("euclidean"),
         cdist=_euclidean_cdist,
         true_device=_euclidean_true,
+        rowwise=_euclidean_rowwise,
         dtype=jnp.float32,
         col_mult=128,
         tile_q=256, tile_p=512,
@@ -235,6 +265,7 @@ def _register_builtins() -> None:
         name="hamming",
         host=get_host_metric("hamming"),
         cdist=_hamming_cdist,
+        rowwise=_hamming_rowwise,
         dtype=jnp.uint32,
         exact=True,
         col_mult=8,
@@ -252,6 +283,7 @@ def _register_builtins() -> None:
         name="manhattan",
         host=get_host_metric("manhattan"),
         cdist=_l1_cdist,
+        rowwise=_l1_rowwise,
         dtype=jnp.float32,
         col_mult=8,                  # chunked VPU body, like hamming
         tile_q=128, tile_p=256,

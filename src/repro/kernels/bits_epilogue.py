@@ -1,0 +1,189 @@
+"""Fused result epilogues over packed survivor bitmasks.
+
+The engines' inner loops emit packed little-endian uint32 hit masks
+(column c -> word c // 32, bit c % 32 — the ``_pack_words`` idiom). Two
+epilogues turn those words into the SENTINEL-padded neighbor-id tables the
+drivers consume, without the dense intermediates the pre-kernel path
+materialized:
+
+``bits_to_cols``  (m, W) uint32 -> (m, k) int32: the k lowest set column
+    indices of each row, ascending, ``NOCOL``-padded. Replaces the two
+    chained ``lax.top_k`` passes (word occupancy -> candidate columns) of
+    the old extraction — the selection is a rank computation over word
+    popcounts, so the kernel reads each word once and never sorts.
+
+``leaf_range_pack``  (delta (nq, >=NL) int32 range-deltas, leaf_ids (NL,),
+    qids (nq,)) -> (cnt (nq,), bits (nq, NL/32) uint32): fuses the tree
+    traversal's emitted-leaf-range reconstruction — running prefix sum of
+    the ±1 deltas, the >0 cover test, leaf-slot validity, structural
+    self-pair exclusion — with the bit packing and the per-row popcount,
+    so the dense (nq, NL) cover mask never exists outside registers/VMEM.
+
+Both selections are deterministic functions of the input words (no value
+sorts, no tie-breaking), so the pallas kernel, the interpret path and the
+jnp oracle are bit-identical — and identical to the ``top_k`` extraction
+they replace, whose output spec ("k smallest hit columns, ascending,
+padded") is the same function.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .nng_tile import _pack_words
+from .tree_frontier import _unpack_words
+
+NOCOL = 2**30        # "no more hit columns" padding (device._NOCOL)
+SENTINEL = 2**31 - 1  # neighbor-table padding id
+
+
+# ---------------------------------------------------------------------------
+# bitmask -> sorted column ids
+# ---------------------------------------------------------------------------
+
+def bits_to_cols_ref(bits, k: int):
+    """Pure-jnp oracle: (m, W) uint32 -> (m, k) int32 lowest set columns,
+    ascending, NOCOL-padded. The rank of a set column (cumulative popcount
+    of all lower columns) IS its output slot; ranks >= k scatter-drop."""
+    m, w = bits.shape
+    cols = _unpack_words(bits)                        # (m, 32W) bool
+    ci = cols.astype(jnp.int32)
+    rank = jnp.cumsum(ci, axis=1) - ci                # exclusive bit rank
+    slot = jnp.where(cols, rank, k)                   # unset bits -> dropped
+    col = jnp.broadcast_to(
+        jnp.arange(32 * w, dtype=jnp.int32)[None, :], (m, 32 * w))
+    row = jnp.broadcast_to(jnp.arange(m)[:, None], (m, 32 * w))
+    out = jnp.full((m, k), NOCOL, jnp.int32)
+    return out.at[row, slot].set(col, mode="drop")
+
+
+def _select_nth_set_bit(word, r):
+    """word (...,) uint32, r (...,) int32 -> bit position of the r-th
+    (0-based) set bit of each word; 32 when the word has <= r set bits."""
+    b = jnp.arange(32, dtype=jnp.uint32)
+    # inclusive prefix mask of bit b; b = 31 wraps to all-ones, as intended
+    mask = (jnp.uint32(2) << b) - jnp.uint32(1)
+    inc = jax.lax.population_count(
+        word[..., None] & mask).astype(jnp.int32)     # (..., 32) nondecreasing
+    return jnp.sum((inc <= r[..., None]).astype(jnp.int32), axis=-1)
+
+
+def _bits_cols_kernel(bits_ref, out_ref, *, kc: int):
+    bits = bits_ref[...]                              # (TQ, W)
+    w = bits.shape[1]
+    pc = jax.lax.population_count(bits).astype(jnp.int32)
+    cumi = jnp.cumsum(pc, axis=1)                     # inclusive word counts
+    cume = cumi - pc                                  # exclusive word counts
+    total = cumi[:, -1]                               # (TQ,)
+    j = pl.program_id(1) * kc + jnp.arange(kc, dtype=jnp.int32)   # (KC,)
+    # word holding output slot j: #\{w : cumi[w] <= j\} (rank selection over
+    # the word popcounts — no sort); set-bit count before it: sum of those
+    # words' popcounts. One (TQ, KC, W) compare cube instead of a gather.
+    lt = (cumi[:, None, :] <= j[None, :, None])       # (TQ, KC, W)
+    wsel = jnp.sum(lt.astype(jnp.int32), axis=-1)     # (TQ, KC)
+    before = jnp.sum(jnp.where(lt, pc[:, None, :], 0), axis=-1)
+    widx = jnp.arange(w, dtype=jnp.int32)
+    word = jnp.sum(
+        jnp.where(widx[None, None, :] == wsel[..., None],
+                  bits[:, None, :], jnp.uint32(0)),
+        axis=-1, dtype=jnp.uint32)                    # (TQ, KC)
+    bit = _select_nth_set_bit(word, j[None, :] - before)
+    col = wsel * 32 + bit
+    out_ref[...] = jnp.where(j[None, :] < total[:, None], col,
+                             jnp.int32(NOCOL))
+
+
+def bits_to_cols_pallas(bits, k: int, *, tq: int = 128, kc: int = 128,
+                        interpret: bool = False):
+    """Pallas kernel: same contract as ``bits_to_cols_ref``. Row/slot grid;
+    each program ranks one (tq, kc) output block from the row's words in
+    VMEM. m % tq == 0 and k % kc == 0 (wrappers pad)."""
+    m, w = bits.shape
+    assert m % tq == 0 and k % kc == 0, (m, tq, k, kc)
+    grid = (m // tq, k // kc)
+    kernel = functools.partial(_bits_cols_kernel, kc=kc)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tq, w), lambda i, j: (i, 0))],
+        out_specs=pl.BlockSpec((tq, kc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.int32),
+        interpret=interpret,
+    )(bits)
+
+
+# ---------------------------------------------------------------------------
+# leaf-range delta -> packed cover bits
+# ---------------------------------------------------------------------------
+
+def leaf_range_pack_ref(delta, leaf_ids, qids, sentinel=SENTINEL):
+    """Pure-jnp oracle. delta (nq, NL) int32 (±1 range deltas over leaf
+    slots), leaf_ids (NL,) int32 global ids (sentinel = padding), qids
+    (nq,) int32 query ids -> (cnt (nq,), bits (nq, NL/32) uint32)."""
+    cover = jnp.cumsum(delta, axis=1) > 0
+    cover &= (leaf_ids != sentinel)[None, :]
+    cover &= qids[:, None] != leaf_ids[None, :]
+    cnt = jnp.sum(cover.astype(jnp.int32), axis=1)
+    return cnt, _pack_words(cover)
+
+
+def _leaf_pack_kernel(delta_ref, lid_ref, qid_ref, cnt_ref, bits_ref,
+                      carry_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _reset():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    d = delta_ref[...].astype(jnp.float32)            # (TQ, TN) exact ints
+    tn = d.shape[1]
+    # within-block inclusive prefix sum via a triangular MXU contraction
+    a = jax.lax.broadcasted_iota(jnp.int32, (tn, tn), 0)
+    b = jax.lax.broadcasted_iota(jnp.int32, (tn, tn), 1)
+    tri = (a <= b).astype(jnp.float32)
+    csum = jax.lax.dot_general(
+        d, tri, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) + carry_ref[...]
+    carry_ref[...] = csum[:, -1:]
+    lid = lid_ref[...]
+    cover = ((csum > 0.5)
+             & (lid != SENTINEL)[None, :]
+             & (qid_ref[...][:, None] != lid[None, :]))
+    bits_ref[...] = _pack_words(cover)
+    cnt_ref[...] += jnp.sum(cover.astype(jnp.int32), axis=1)
+
+
+def leaf_range_pack_pallas(delta, leaf_ids, qids, *, tq: int = 128,
+                           tn: int = 512, interpret: bool = False):
+    """Pallas kernel: same contract as ``leaf_range_pack_ref``. The leaf
+    axis is the sequential (minor) grid dimension; a (tq, 1) VMEM scratch
+    carries the running prefix sum across column blocks, and the cnt block
+    accumulates in place across them. nq % tq == 0, NL % tn == 0,
+    tn % 32 == 0 (wrappers pad)."""
+    nq, nl = delta.shape
+    assert nq % tq == 0 and nl % tn == 0 and tn % 32 == 0, (nq, tq, nl, tn)
+    grid = (nq // tq, nl // tn)
+    return pl.pallas_call(
+        _leaf_pack_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, tn), lambda i, j: (i, j)),
+            pl.BlockSpec((tn,), lambda i, j: (j,)),
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+            pl.BlockSpec((tq, tn // 32), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq,), jnp.int32),
+            jax.ShapeDtypeStruct((nq, nl // 32), jnp.uint32),
+        ],
+        scratch_shapes=[pltpu.VMEM((tq, 1), jnp.float32)],
+        interpret=interpret,
+    )(delta, leaf_ids, qids)

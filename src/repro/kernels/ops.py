@@ -19,7 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import bits_epilogue as _be
 from . import ref
+from .bits_epilogue import NOCOL, SENTINEL
 from .eps_count import eps_count_pallas
 from .nng_tile import _GBIG, _grouped_hit, _pack_words
 from .pairwise_hamming import pairwise_hamming_pallas
@@ -343,6 +345,91 @@ def tree_frontier_step(q, c, rad, leaf, act_bits, eps: float,
         qp, cp, radp, leafp, actp, fn=met.frontier_pallas, eps=float(eps),
         tq=tq, tn=tn, interpret=mode == "interpret")
     return emit[:nq, :nw], expand[:nq, :nw]
+
+
+# ---------------------------------------------------------------------------
+# fused result epilogues (packed bitmask words -> neighbor-id tables)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "tq", "kc", "interpret"))
+def _bits_cols_padded(bits, *, k, tq, kc, interpret):
+    return _be.bits_to_cols_pallas(bits, k, tq=tq, kc=kc, interpret=interpret)
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+def bits_to_cols(bits, k: int) -> jnp.ndarray:
+    """(m, W) packed uint32 hit words -> (m, k) int32: each row's k lowest
+    set column indices, ascending, ``NOCOL``-padded — the fused epilogue
+    that replaced the two chained ``lax.top_k`` passes. Deterministic (a
+    rank computation, no value sort), so every mode is bit-identical."""
+    bits = jnp.asarray(bits, jnp.uint32)
+    mode = _mode()
+    if mode == "jnp":
+        return _be.bits_to_cols_ref(bits, k)
+    m = bits.shape[0]
+    tq = 128 if m >= 128 else _round_up(max(m, 1), 8)
+    kc = min(128, _round_up(k, 8))
+    kp = _round_up(k, kc)
+    bp, _ = _pad_rows(bits, tq)
+    out = _bits_cols_padded(bp, k=kp, tq=tq, kc=kc,
+                            interpret=mode == "interpret")
+    return out[:m, :k]
+
+
+def bits_to_ids(bits, id0, k: int) -> jnp.ndarray:
+    """Hit words over a CONTIGUOUS id block starting at ``id0`` -> (m, k)
+    int32 neighbor ids, ascending, SENTINEL-padded."""
+    cols = bits_to_cols(bits, k)
+    return jnp.where(cols < jnp.int32(NOCOL), id0 + cols,
+                     jnp.int32(SENTINEL))
+
+
+def bits_to_gathered_ids(bits, ids_row, k: int) -> jnp.ndarray:
+    """Hit words whose columns index an arbitrary id row -> (m, k) int32
+    neighbor ids, sorted ascending, SENTINEL-padded. The gather can permute
+    id order, so a small (m, k) sort restores it — k, not the tile width."""
+    cols = bits_to_cols(bits, k)
+    p = ids_row.shape[0]
+    ids = jnp.where(cols < p,
+                    jnp.take(ids_row, jnp.minimum(cols, p - 1)),
+                    jnp.int32(SENTINEL))
+    return jnp.sort(ids, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "tn", "interpret"))
+def _leaf_pack_padded(delta, lid, qid, *, tq, tn, interpret):
+    return _be.leaf_range_pack_pallas(delta, lid, qid, tq=tq, tn=tn,
+                                      interpret=interpret)
+
+
+def leaf_range_pack(delta, leaf_ids, qids):
+    """Fused tree-traversal leaf epilogue: ±1 range deltas over DFS leaf
+    slots -> (cnt (nq,), bits (nq, NL/32) uint32) packed cover mask, with
+    leaf-slot validity and structural self-pair exclusion applied — the
+    dense (nq, NL) cover mask never reaches HBM on the kernel path.
+
+    ``delta`` may carry trailing overflow columns (the traversal scatters
+    hi = NL there); only the first ``len(leaf_ids)`` columns participate.
+    ``len(leaf_ids)`` % 32 == 0 (the flat-tree padding invariant)."""
+    nl = leaf_ids.shape[0]
+    assert nl % 32 == 0, nl
+    delta = jnp.asarray(delta, jnp.int32)[:, :nl]
+    leaf_ids = jnp.asarray(leaf_ids, jnp.int32)
+    qids = jnp.asarray(qids, jnp.int32)
+    mode = _mode()
+    if mode == "jnp":
+        return _be.leaf_range_pack_ref(delta, leaf_ids, qids)
+    nq = delta.shape[0]
+    tq = 128 if nq >= 128 else _round_up(max(nq, 1), 8)
+    tn = next(t for t in (512, 256, 128, 64, 32) if nl % t == 0)
+    dp, _ = _pad_rows(delta, tq)
+    qp, _ = _pad_rows(qids, tq, value=-1)
+    cnt, bits = _leaf_pack_padded(dp, leaf_ids, qp, tq=tq, tn=tn,
+                                  interpret=mode == "interpret")
+    return cnt[:nq], bits[:nq]
 
 
 @jax.jit

@@ -124,7 +124,7 @@ class PointPartitionEngine(Engine):
     def __init__(self, points, eps, mesh, metric, *, k_cap: int = 64,
                  prune: bool = True, traversal: str = "tiles",
                  forest: dict | None = None, axis: str = "ring",
-                 overlap: bool = True):
+                 overlap: bool = True, forest_backend: str = "device"):
         self.metric = get_metric(metric)
         self.points = np.asarray(points)
         self.eps = float(eps)
@@ -134,11 +134,19 @@ class PointPartitionEngine(Engine):
         self.traversal = traversal
         self.axis = axis
         self.overlap = bool(overlap)
+        self.forest_backend = forest_backend
+        self.build_s = 0.0
         if traversal == "tree" and forest is None:
             from repro.core.flat_tree import (build_block_forests,
                                               stack_device_forests)
-            forest = stack_device_forests(build_block_forests(
-                self.points, mesh.size, self.metric.host))
+            t0 = time.perf_counter()
+            if forest_backend == "device":
+                forest = jax.block_until_ready(build_block_forests(
+                    self.points, mesh.size, self.metric, backend="device"))
+            else:
+                forest = stack_device_forests(build_block_forests(
+                    self.points, mesh.size, self.metric.host))
+            self.build_s = time.perf_counter() - t0
         self.forest = forest
         # the split ring schedule is static (part of the compiled program),
         # so plan it once per engine — the grow loop only changes k_cap
@@ -156,7 +164,8 @@ class PointPartitionEngine(Engine):
             self.points, self.eps, self.mesh, metric=self.metric,
             k_cap=k_cap, prune=self.prune, traversal=self.traversal,
             forest=self.forest, axis=self.axis, overlap=self.overlap,
-            ring_schedule=self.ring_schedule)
+            ring_schedule=self.ring_schedule,
+            forest_backend=self.forest_backend)
 
     def overflowed(self, out):
         return bool(np.asarray(out[2]).any())
@@ -249,7 +258,8 @@ class SpatialPartitionEngine(Engine):
                  planner: str = "device", m_centers: int | None = None,
                  traversal: str = "tiles", centers=None, f=None, cell=None,
                  plan: LandmarkPlan | None = None, forest: dict | None = None,
-                 seed: int = 0, axis: str = "ring"):
+                 seed: int = 0, axis: str = "ring",
+                 forest_backend: str = "device"):
         self.metric = get_metric(metric)
         self.points = np.asarray(points)
         self.eps = float(eps)
@@ -279,11 +289,21 @@ class SpatialPartitionEngine(Engine):
             f = lpt_assignment(
                 np.bincount(self.cell, minlength=self.m_centers), nranks)
         self.f = np.asarray(f, np.int32)
+        self.forest_backend = forest_backend
+        self.build_s = 0.0
         if traversal == "tree" and forest is None:
             from repro.core.flat_tree import (build_cell_forests,
                                               stack_device_forests)
-            forest = stack_device_forests(build_cell_forests(
-                self.points, self.cell, self.f, nranks, self.metric.host))
+            t0 = time.perf_counter()
+            if forest_backend == "device":
+                forest = jax.block_until_ready(build_cell_forests(
+                    self.points, self.cell, self.f, nranks, self.metric,
+                    backend="device"))
+            else:
+                forest = stack_device_forests(build_cell_forests(
+                    self.points, self.cell, self.f, nranks,
+                    self.metric.host))
+            self.build_s = time.perf_counter() - t0
         self.forest = forest
 
     # -- planning -----------------------------------------------------------
@@ -337,7 +357,8 @@ class SpatialPartitionEngine(Engine):
         return landmark_run(
             self.points, self.eps, self.centers, self.f, self.mesh, plan,
             metric=self.metric, traversal=self.traversal,
-            forest=self.forest, cell=self.cell, axis=self.axis)
+            forest=self.forest, cell=self.cell, axis=self.axis,
+            forest_backend=self.forest_backend)
 
     def overflowed(self, out):
         return bool(np.asarray(out[6]).any())
@@ -384,6 +405,7 @@ def build_nng(
     seed: int = 0,
     max_grows: int = 8,
     overlap: bool = True,
+    forest_backend: str = "device",
 ) -> NNGraph:
     """Build the exact ε-neighbor graph of ``points`` under ``metric``,
     distributed over ``mesh``. Returns a CSR ``NNGraph``.
@@ -394,7 +416,11 @@ def build_nng(
     padding up to the mesh size, stripped from the result). ``overlap``
     (point partition only) selects the double-buffered systolic ring —
     ``False`` falls back to the strict rotate-then-evaluate schedule, kept
-    for A/B timing.
+    for A/B timing. ``forest_backend`` ("device", the default, or "host")
+    picks who runs the cover-forest construction for ``traversal="tree"``:
+    the jit device builder (``flat_tree_device``, the end-to-end
+    device-resident path) or the float64 host oracle; the forest phase is
+    timed separately in ``RunStats.build_s``.
     """
     met = get_metric(metric)
     if mesh is None:
@@ -416,11 +442,13 @@ def build_nng(
     if partition == "point":
         engine = PointPartitionEngine(
             run_points, eps, mesh, met, k_cap=k_cap or 64, prune=prune,
-            traversal=traversal, overlap=overlap)
+            traversal=traversal, overlap=overlap,
+            forest_backend=forest_backend)
     elif partition == "spatial":
         engine = SpatialPartitionEngine(
             run_points, eps, mesh, met, k_cap=k_cap or 128, planner=planner,
-            m_centers=m_centers, traversal=traversal, seed=seed)
+            m_centers=m_centers, traversal=traversal, seed=seed,
+            forest_backend=forest_backend)
     else:
         raise ValueError(
             f"unknown partition {partition!r} (want 'point' or 'spatial')")
@@ -429,11 +457,14 @@ def build_nng(
     stats = engine.run_stats(out, plan)
     stats.replans = replans
     stats.elapsed_s = elapsed
+    stats.build_s = engine.build_s
     meta = {
         "metric": met.name, "eps": float(eps), "partition": partition,
         "traversal": traversal, "nranks": mesh.size, "padded": pad,
         "plan": plan,
     }
+    if traversal == "tree":
+        meta["forest_backend"] = forest_backend
     if partition == "point":
         meta["overlap"] = bool(overlap)
         if engine.ring_schedule is not None:
