@@ -1,0 +1,42 @@
+"""Static analyzer for the NNG repro: kernel contracts, jaxpr lints,
+collective-traffic audit, dead-module report.
+
+Run ``python -m repro.analysis --check`` (CI lint lane) or import the
+passes directly. This ``__init__`` is deliberately lazy/jax-free: the CLI
+must be able to set XLA_FLAGS in ``__main__`` before jax initializes, and
+``python -m repro.analysis`` imports this module first.
+"""
+from __future__ import annotations
+
+_LAZY = {
+    "Diagnostic": "diagnostics",
+    "CODES": "diagnostics",
+    "load_baseline": "diagnostics",
+    "split_baselined": "diagnostics",
+    "KernelContract": "contracts",
+    "check_contract": "contracts",
+    "check_all": "contracts",
+    "default_contracts": "contracts",
+    "lint_threshold_literals": "lints",
+    "lint_int_accumulators": "lints",
+    "lint_host_sync": "lints",
+    "lint_f64": "lints",
+    "lint_cache_keys": "cache_key",
+    "lint_dead_modules": "modgraph",
+    "dead_modules": "modgraph",
+    "audit_systolic": "traffic",
+    "audit_landmark": "traffic",
+    "audit_all": "traffic",
+    "kernel_costs": "kernel_cost",
+    "run_analysis": "report",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(name)

@@ -1,0 +1,79 @@
+"""CLI: ``python -m repro.analysis [--check] [--out report.json]``.
+
+Report mode prints the full JSON report; ``--check`` exits non-zero when
+any diagnostic is not covered by the suppression baseline
+(``src/repro/analysis/baseline.json`` unless ``--baseline`` overrides).
+``--write-baseline`` accepts the current findings into a baseline file —
+an explicit, reviewed action, never automatic.
+"""
+import os
+
+# The traffic audit traces both engines on an 8-rank mesh; force the host
+# platform to expose enough devices BEFORE jax initializes (same pattern
+# as repro.launch.dryrun). Harmless when real accelerators are present.
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+import sys       # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="kernel-contract + collective-traffic static analyzer")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on any non-baselined diagnostic")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON report to this path")
+    ap.add_argument("--baseline", default=None,
+                    help="suppression baseline path (default: packaged "
+                         "baseline.json)")
+    ap.add_argument("--write-baseline", default=None, metavar="PATH",
+                    help="write current diagnostics to PATH as a baseline")
+    ap.add_argument("--no-traffic", action="store_true",
+                    help="skip the multi-device collective-traffic audit")
+    ap.add_argument("--no-costs", action="store_true",
+                    help="skip the per-kernel HLO cost estimates")
+    ap.add_argument("--nranks", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    from .diagnostics import Diagnostic, write_baseline
+    from .report import run_analysis
+
+    report = run_analysis(traffic=not args.no_traffic,
+                          costs=not args.no_costs,
+                          nranks=args.nranks,
+                          baseline_path=args.baseline)
+
+    if args.write_baseline:
+        diags = [Diagnostic(**d) for d in report["diagnostics"]]
+        write_baseline(diags, args.write_baseline)
+        print(f"wrote {len(diags)} baseline entries to "
+              f"{args.write_baseline}", file=sys.stderr)
+
+    text = json.dumps(report, indent=1, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(text + "\n")
+        print(f"report written to {args.out}", file=sys.stderr)
+    else:
+        print(text)
+
+    fresh = report["fresh"]
+    known = report["baselined"]
+    print(f"{len(report['diagnostics'])} diagnostic(s): "
+          f"{len(fresh)} fresh, {len(known)} baselined", file=sys.stderr)
+    for d in fresh:
+        print(f"  {d['code']} [{d['subject']}] {d['message']}",
+              file=sys.stderr)
+    if args.check and fresh:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

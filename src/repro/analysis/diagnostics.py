@@ -1,0 +1,101 @@
+"""Diagnostic objects, code registry, and the suppression baseline.
+
+Every analyzer pass emits ``Diagnostic`` records keyed by a stable code
+(table below). ``python -m repro.analysis --check`` fails on any diagnostic
+not matched by the suppression baseline (``baseline.json`` next to this
+file) — the baseline is an explicit, reviewed allowlist, never a dumping
+ground: each entry records the code + subject plus a human reason.
+
+Codes
+-----
+RA001  kernel or oracle failed to trace (contract unverifiable)
+RA002  kernel/oracle output avals disagree, or violate the declared dtype
+       policy
+RA003  declared tile/%32 padding invariant violated
+RA004  kernel contract declares no jnp oracle
+RA101  float compare literal is a near-miss of the canonical threshold
+       (python-float folding, the ``float(eps) ** 2`` f64→fp32 bug class),
+       or the canonical threshold never appears
+RA102  scalar integer loop carry accumulated by a data-dependent add
+       (wraps silently at paper scale; counters must be float32)
+RA103  host callback / infeed / outfeed primitive inside a jitted body
+RA104  float64 value inside an fp32 program
+RA110  lru_cache program builder reads module state that is not part of
+       its cache key
+RA201  collective event not attributable to any accounted comm channel
+RA202  statically derived channel bytes disagree with the RunStats formula
+RA301  module unreachable from the public entry points (dead code)
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+
+CODES = {
+    "RA001": "contract trace failure",
+    "RA002": "kernel/oracle aval or dtype-policy mismatch",
+    "RA003": "tile shape / %32 padding invariant violated",
+    "RA004": "missing jnp oracle",
+    "RA101": "non-canonical float threshold literal",
+    "RA102": "int scalar loop accumulator",
+    "RA103": "host sync primitive in jitted body",
+    "RA104": "float64 in fp32 program",
+    "RA110": "lru_cache key incompleteness",
+    "RA201": "uncounted collective channel",
+    "RA202": "derived comm bytes != RunStats formula",
+    "RA301": "dead module",
+}
+
+
+@dataclass(frozen=True)
+class Diagnostic:
+    """One analyzer finding. ``subject`` is the stable identity used for
+    baseline matching (kernel name, engine config, module name); the
+    message is free-form detail."""
+
+    code: str
+    subject: str
+    message: str = field(compare=False)
+
+    def __post_init__(self):
+        assert self.code in CODES, f"unknown diagnostic code {self.code!r}"
+
+    def render(self) -> str:
+        return f"{self.code} [{self.subject}] {self.message}"
+
+    def to_json(self) -> dict:
+        return asdict(self)
+
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+def load_baseline(path: str | Path | None = None) -> list[dict]:
+    """Baseline entries: [{"code", "subject", "reason"}, ...]."""
+    p = Path(path) if path is not None else DEFAULT_BASELINE
+    if not p.exists():
+        return []
+    return json.loads(p.read_text())
+
+
+def is_baselined(diag: Diagnostic, baseline: list[dict]) -> bool:
+    return any(b["code"] == diag.code and b["subject"] == diag.subject
+               for b in baseline)
+
+
+def split_baselined(
+    diags: list[Diagnostic], baseline: list[dict]
+) -> tuple[list[Diagnostic], list[Diagnostic]]:
+    """-> (non-baselined, baselined)."""
+    fresh, known = [], []
+    for d in diags:
+        (known if is_baselined(d, baseline) else fresh).append(d)
+    return fresh, known
+
+
+def write_baseline(diags: list[Diagnostic], path: str | Path,
+                   reason: str = "accepted by --write-baseline") -> None:
+    entries = [{"code": d.code, "subject": d.subject, "reason": reason}
+               for d in sorted(set(diags), key=lambda d: (d.code, d.subject))]
+    Path(path).write_text(json.dumps(entries, indent=1) + "\n")

@@ -1,0 +1,55 @@
+"""Per-kernel static FLOP/byte estimates (satellite of the contract pass).
+
+Resurrects ``repro.roofline.hlo_analysis`` as an analysis pass: each
+registered kernel contract's *oracle* (the jnp program — the Pallas side
+doesn't lower on CPU CI) is lowered and compiled, the optimized HLO text
+is walked by ``analyze_hlo``, and the report gets static FLOPs, HBM
+bytes, arithmetic intensity, and the roofline-predicted bound against the
+reference single-chip ``HW`` numbers. These are per-*tile* costs at the
+contract's probe shapes — the point is relative weight and compute- vs
+memory-bound classification per kernel, not absolute wall clock.
+"""
+from __future__ import annotations
+
+import jax
+
+from .contracts import KernelContract
+
+__all__ = ["kernel_cost", "kernel_costs"]
+
+
+def kernel_cost(c: KernelContract) -> dict | None:
+    """Static cost row for one contract, or None when it has no oracle
+    (RA004 covers that) or compilation fails on this backend."""
+    from repro.roofline import HW, analyze_hlo, roofline_terms
+
+    if c.oracle_trace is None:
+        return None
+    try:
+        fn, args = c.oracle_trace()
+        hlo = jax.jit(fn).lower(*args).compile().as_text()
+    except Exception as e:  # noqa: BLE001 — cost is best-effort, not a gate
+        return {"kernel": c.name, "error": f"{type(e).__name__}: {e}"}
+    stats = analyze_hlo(hlo)
+    hw = HW()
+    terms = roofline_terms(stats, chips=1, hw=hw)
+    ai = (stats.flops / stats.mem_bytes) if stats.mem_bytes else float("inf")
+    return {
+        "kernel": c.name,
+        "flops": float(stats.flops),
+        "hbm_bytes": float(stats.mem_bytes),
+        "arith_intensity": float(ai),
+        "bound": ("compute" if ai >= hw.peak_flops / hw.hbm_bw
+                  else "memory"),
+        "t_compute_s": terms["t_compute_s"],
+        "t_memory_s": terms["t_memory_s"],
+    }
+
+
+def kernel_costs(contracts) -> list[dict]:
+    rows = []
+    for c in contracts:
+        row = kernel_cost(c)
+        if row is not None:
+            rows.append(row)
+    return rows

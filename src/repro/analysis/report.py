@@ -1,0 +1,72 @@
+"""Full-repo analysis run: contracts + lints + traffic audit + costs.
+
+``run_analysis`` assembles the report dict the CLI serializes; every
+section contributes to the flat ``diagnostics`` list that ``--check``
+gates on (minus the suppression baseline).
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+from .cache_key import lint_cache_keys
+from .contracts import check_all, default_contracts
+from .diagnostics import Diagnostic, load_baseline, split_baselined
+from .kernel_cost import kernel_costs
+from .lints import lint_f64, lint_host_sync, lint_int_accumulators
+from .modgraph import lint_dead_modules
+
+__all__ = ["run_analysis", "SRC_ROOT", "CACHE_KEY_MODULES"]
+
+SRC_ROOT = Path(__file__).resolve().parents[1]          # src/repro
+CACHE_KEY_MODULES = (
+    SRC_ROOT / "core" / "distributed" / "device.py",
+)
+
+
+def _engine_lints(jaxprs: dict) -> list[Diagnostic]:
+    diags = []
+    for subject, jaxpr in jaxprs.items():
+        diags += lint_int_accumulators(jaxpr, subject=subject)
+        diags += lint_host_sync(jaxpr, subject=subject)
+        diags += lint_f64(jaxpr, subject=subject)
+    return diags
+
+
+def run_analysis(*, traffic: bool = True, costs: bool = True,
+                 nranks: int = 8, baseline_path=None) -> dict:
+    diags: list[Diagnostic] = []
+
+    contract_diags, contracts = check_all()
+    diags += contract_diags
+
+    for mod in CACHE_KEY_MODULES:
+        diags += lint_cache_keys(mod)
+
+    dead = lint_dead_modules(SRC_ROOT)
+    diags += dead
+
+    traffic_table = {}
+    if traffic:
+        from .traffic import audit_all
+        traffic_diags, traffic_table, jaxprs = audit_all(nranks=nranks)
+        diags += traffic_diags
+        diags += _engine_lints(jaxprs)
+
+    cost_rows = kernel_costs(contracts) if costs else []
+
+    baseline = load_baseline(baseline_path)
+    fresh, known = split_baselined(diags, baseline)
+    return {
+        "contracts": {
+            "checked": [c.name for c in contracts],
+            "violations": [d.to_json() for d in contract_diags],
+        },
+        "cache_keys": {"modules": [str(m) for m in CACHE_KEY_MODULES]},
+        "dead_modules": [d.subject for d in dead],
+        "traffic": traffic_table,
+        "kernel_costs": cost_rows,
+        "diagnostics": [d.to_json() for d in diags],
+        "baselined": [d.to_json() for d in known],
+        "fresh": [d.to_json() for d in fresh],
+        "ok": not fresh,
+    }

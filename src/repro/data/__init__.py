@@ -1,4 +1,3 @@
-from .pipeline import synthetic_lm_batches, TokenBatcher  # noqa: F401
 from .pointsets import (  # noqa: F401
     blocked_clusters,
     load_pointset,

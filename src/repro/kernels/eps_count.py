@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.nng_tile import _eps2_f32
+
 
 def _eps_count_kernel(x_ref, y_ref, mask_ref, out_ref, *, eps2: float):
     j = pl.program_id(1)
@@ -53,7 +55,10 @@ def eps_count_pallas(
     p, _ = y.shape
     assert q % tq == 0 and p % tp == 0, (x.shape, y.shape)
     grid = (q // tq, p // tp)
-    kernel = functools.partial(_eps_count_kernel, eps2=float(eps) ** 2)
+    # _eps2_f32, not float(eps) ** 2: squaring in f64 and letting the
+    # compare cast the literal to f32 lands 1 ulp off the oracle's
+    # f32(eps)**2 threshold on knife-edge pairs (repro.analysis RA101)
+    kernel = functools.partial(_eps_count_kernel, eps2=_eps2_f32(eps))
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -195,6 +195,9 @@ class PointPartitionEngine(Engine):
         - ``ring_mirror``: the visiting block's neighbor accumulator
           ((n_loc, k_cap) ids + (n_loc,) counts) — ``rounds`` in-loop hops
           plus the final shift-``rounds`` return home.
+        - ``ring_summary`` (prune only): the one-shot block-summary
+          all_gather in ``_round_skip_flags`` — each rank contributes its
+          (dim,) center plus the scalar radius.
         """
         nranks = self.mesh.size
         rounds = nranks // 2
@@ -205,6 +208,8 @@ class PointPartitionEngine(Engine):
         item = self.points.dtype.itemsize
         mirror_hop = n_loc * k_cap * 4 + n_loc * 4
         bytes_ = {"ring_mirror": float(nranks * (rounds + 1) * mirror_hop)}
+        if self.prune:
+            bytes_["ring_summary"] = float(nranks * (dim * item + 4))
         if self.traversal == "tree":
             pt_hop = n_loc * dim * item + n_loc * 4
             bytes_["ring_points"] = float(nranks * rounds * pt_hop)
@@ -370,19 +375,25 @@ class SpatialPartitionEngine(Engine):
         return [(np.asarray(out[0]), np.asarray(out[1])),
                 (np.asarray(out[3]), np.asarray(out[4]))]
 
-    def run_stats(self, out, plan: LandmarkPlan) -> RunStats:
+    def _landmark_comm_bytes(self, plan: LandmarkPlan) -> dict:
+        """Per-channel all_to_all bytes: the coalesce and ghost exchanges
+        each move three (nranks, cap, …) operands per rank — point rows,
+        global ids, and cell assignments (pts + id + cell per row)."""
         nranks = self.mesh.size
         dim = self.points.shape[1]
         row_bytes = self.points.dtype.itemsize * dim + 4 + 4  # pts + id + cell
         lw = nranks * plan.cap_coal
         lg = nranks * plan.cap_ghost
+        return {"coalesce": float(nranks * lw * row_bytes),
+                "ghost": float(nranks * lg * row_bytes)}
+
+    def run_stats(self, out, plan: LandmarkPlan) -> RunStats:
         return RunStats(
             tiles_scheduled=float(np.asarray(out[8]).sum()),
             tiles_skipped=float(np.asarray(out[7]).sum()),
             dists_evaluated=float(np.asarray(out[9]).sum()),
             nodes_pruned=float(np.asarray(out[10]).sum()),
-            comm_bytes={"coalesce": float(nranks * lw * row_bytes),
-                        "ghost": float(nranks * lg * row_bytes)},
+            comm_bytes=self._landmark_comm_bytes(plan),
         )
 
 

@@ -1,2 +1,2 @@
 from .hlo_analysis import analyze_hlo, HloStats  # noqa: F401
-from .model import roofline_terms, HW, model_flops  # noqa: F401
+from .model import roofline_terms, HW  # noqa: F401

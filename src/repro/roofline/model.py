@@ -34,44 +34,3 @@ def roofline_terms(stats: HloStats, chips: int, hw: HW = HW()) -> dict:
         "mem_bytes": stats.mem_bytes,
         "coll_bytes": dict(stats.coll_bytes),
     }
-
-
-def model_flops(cfg, seq_len: int, global_batch: int, kind: str) -> float:
-    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE), D = tokens.
-
-    For decode kinds D = global_batch (one token per sequence); for train,
-    6·N·D (fwd 2ND + bwd 4ND); for prefill, 2·N·D (forward only).
-    """
-    n = _active_params(cfg)
-    tokens = global_batch * (seq_len if kind in ("train", "prefill") else 1)
-    mult = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[kind]
-    return mult * n * tokens
-
-
-def _active_params(cfg) -> float:
-    """Parameter count that touches each token (MoE: top_k of experts)."""
-    d, v = cfg.d_model, cfg.vocab
-    total = v * d  # embed (tied head reuses)
-    if not cfg.tied_embeddings:
-        total += d * v * (cfg.n_codebooks if cfg.family == "audio" else 1)
-        if cfg.family == "audio":
-            total += (cfg.n_codebooks - 1) * v * d  # per-codebook embeds
-    hd, h, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
-    attn = d * h * hd + 2 * d * hkv * hd + h * hd * d
-    mlp_dense = 3 * d * cfg.d_ff
-    fam = cfg.family
-    if fam in ("dense", "vlm", "audio"):
-        total += cfg.n_layers * (attn + mlp_dense)
-    elif fam == "moe":
-        active_ff = 3 * d * cfg.d_ff * cfg.top_k
-        total += cfg.n_layers * (attn + d * cfg.n_experts + active_ff)
-    elif fam == "ssm":
-        per = (3 * d * h * hd + h * hd * d + 2 * d * h)  # qkv, out, gates
-        total += cfg.n_layers * per
-    elif fam == "hybrid":
-        din, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
-        per = d * (2 * din + 2 * ns + nh) + din * d + 4 * din
-        total += cfg.n_layers * per
-        n_apps = cfg.n_layers // cfg.attn_every
-        total += n_apps * (attn + (mlp_dense if cfg.d_ff else 0))
-    return float(total)

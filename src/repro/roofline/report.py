@@ -18,34 +18,6 @@ def _fmt_t(x):
     return f"{x*1e3:.2f}ms" if x < 0.1 else f"{x:.3f}s"
 
 
-def arch_table(cells, mesh="pod1") -> str:
-    """EXPERIMENTS.md §Roofline main table (single-pod, per instructions)."""
-    lines = [
-        "| arch | shape | kind | t_compute | t_memory | t_collective | "
-        "bottleneck | model GFLOP/chip | useful frac | roofline frac |",
-        "|---|---|---|---|---|---|---|---|---|---|",
-    ]
-    for r in cells:
-        if r.get("mesh") != mesh or r.get("shape") == "nng":
-            continue
-        if r["status"].startswith("SKIP"):
-            lines.append(
-                f"| {r['arch']} | {r['shape']} | — | — | — | — | "
-                f"{r['status']} | — | — | — |")
-            continue
-        rf = r["roofline"]
-        # roofline fraction: useful compute time / step lower bound
-        useful_t = r["model_flops_per_chip"] / 197e12
-        frac = useful_t / max(rf["step_lower_bound_s"], 1e-12)
-        lines.append(
-            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
-            f"{_fmt_t(rf['t_compute_s'])} | {_fmt_t(rf['t_memory_s'])} | "
-            f"{_fmt_t(rf['t_collective_s'])} | **{rf['bottleneck']}** | "
-            f"{r['model_flops_per_chip']/1e9:.1f} | "
-            f"{r['useful_flops_frac']:.2f} | {frac:.3f} |")
-    return "\n".join(lines)
-
-
 def nng_table(cells) -> str:
     lines = [
         "| workload | mesh | algo | t_compute | t_memory | t_collective | "
@@ -64,41 +36,7 @@ def nng_table(cells) -> str:
     return "\n".join(lines)
 
 
-def multipod_check(cells) -> str:
-    lines = ["| arch | shape | pod1 | pod2 |", "|---|---|---|---|"]
-    by = {}
-    for r in cells:
-        if r.get("shape") == "nng":
-            key = (r["arch"], "nng")
-        else:
-            key = (r["arch"], r["shape"])
-        by.setdefault(key, {})[r["mesh"]] = r["status"]
-    for (a, s), st in sorted(by.items()):
-        lines.append(f"| {a} | {s} | {st.get('pod1','—')} | {st.get('pod2','—')} |")
-    return "\n".join(lines)
-
-
-def pick_hillclimb_cells(cells):
-    """Worst roofline fraction, most collective-bound, most representative."""
-    ok = [r for r in cells if r["status"] == "OK" and r.get("shape") != "nng"
-          and r["mesh"] == "pod1"]
-    def frac(r):
-        return (r["model_flops_per_chip"] / 197e12) / max(
-            r["roofline"]["step_lower_bound_s"], 1e-12)
-    worst = min(ok, key=frac)
-    coll = max(ok, key=lambda r: r["roofline"]["t_collective_s"]
-               / max(r["roofline"]["step_lower_bound_s"], 1e-12))
-    return worst, coll
-
-
 if __name__ == "__main__":
     cells = load_cells()
-    print("## Arch × shape roofline (pod1)\n")
-    print(arch_table(cells))
-    print("\n## NNG workloads\n")
+    print("## NNG workloads\n")
     print(nng_table(cells))
-    print("\n## Multi-pod dry-run status\n")
-    print(multipod_check(cells))
-    w, c = pick_hillclimb_cells(cells)
-    print(f"\nworst-frac cell: {w['arch']} {w['shape']}")
-    print(f"most collective-bound: {c['arch']} {c['shape']}")

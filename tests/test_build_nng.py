@@ -305,7 +305,10 @@ n_loc = 2048 // 8
 pt_hop = n_loc * pts.shape[1] * pts.dtype.itemsize + 4
 assert st.comm_bytes["ring_points"] == 8 * 5 * pt_hop
 assert st.comm_bytes["ring_mirror"] == 8 * 5 * (n_loc * 512 * 4 + n_loc * 4)
-assert set(st.comm_bytes) == {"ring_points", "ring_mirror"}
+# one-shot block-summary all_gather (prune only): (dim,) center + scalar
+# radius per rank
+assert st.comm_bytes["ring_summary"] == 8 * (pts.shape[1] * 4 + 4)
+assert set(st.comm_bytes) == {"ring_points", "ring_mirror", "ring_summary"}
 assert not st.overflow and st.replans == 0 and st.elapsed_s > 0
 assert g.meta["overlap"] is True and "ring_schedule" not in g.meta
 

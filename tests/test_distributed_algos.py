@@ -543,6 +543,7 @@ for traversal in ("tiles", "tree"):
         # analytic per-channel ring-byte formulas (see nng.py docstring)
         mirror = nranks * (rounds + 1) * (n_loc * k_fin * 4 + n_loc * 4)
         assert st.comm_bytes["ring_mirror"] == mirror, (traversal, overlap)
+        assert st.comm_bytes["ring_summary"] == nranks * (dim * 4 + 4)
         if traversal == "tiles":
             hops = rounds + 1 if overlap else rounds
             assert st.comm_bytes["ring_points"] == \
