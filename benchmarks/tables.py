@@ -271,7 +271,8 @@ def bench_landmark_device(json_path: str = "BENCH_landmark.json"):
     # first — the JSON workload is identical under --only and a full sweep
     d = DATASETS["corel-like"]
     pts = synthetic_pointset(d["n"], d["dim"], "euclidean", seed=1)
-    eps = eps_sweep("corel-like", pts, "euclidean")[1]
+    sweep = eps_sweep("corel-like", pts, "euclidean")
+    eps = sweep[1]
     nranks = len(jax.devices())
     n = (len(pts) // nranks) * nranks
     pts = pts[:n]
@@ -322,6 +323,70 @@ def bench_landmark_device(json_path: str = "BENCH_landmark.json"):
     dists_tree = int(_np.asarray(out_tree[9]).sum())
     nodes_pruned = int(_np.asarray(out_tree[10]).sum())
 
+    # -- ghost-exchange A/B: padded all_to_all vs ppermute block ring -------
+    # The collective path scales with cap_ghost (ghost copies grow with eps
+    # and with how finely the space is cut); the ring path rotates the fixed
+    # coalesced block and is eps-independent. At the default m=32 the cells
+    # are coarse and coll wins; the A/B runs at a FINE partition (m=128,
+    # fat Lemma-1 ghost zones in 32-dim) where the ring pays off — the
+    # regime the mode exists for, and what "auto" is meant to catch.
+    from repro.core.distributed import (ghost_coll_bytes, ghost_ring_bytes,
+                                        resolve_ghost_mode)
+    from repro.nng import SpatialPartitionEngine, drive
+
+    m_fine = 128
+    cidx_f = select_centers(n, m_fine, _np.random.default_rng(0))
+    cpts_f = pts[cidx_f]
+    cell_f = _np.argmin(met.cdist(pts, cpts_f), axis=1)
+    f_fine = lpt_assignment(_np.bincount(cell_f, minlength=m_fine), nranks)
+    plan_f = plan_landmark_device(pts, cpts_f, _np.asarray(f_fine, _np.int32),
+                                  float(eps), mesh, k_cap=128)
+
+    def timed_ghost(gm):
+        eng = SpatialPartitionEngine(
+            pts, eps, mesh, "euclidean", k_cap=128, traversal="tiles",
+            centers=cpts_f, f=f_fine, cell=cell_f, plan=plan_f,
+            ghost_mode=gm)
+        out_g, p_g, _, dt_g = drive(eng, max_grows=10)
+        stats_g = eng.run_stats(out_g, p_g)
+        ch = "ghost_ring" if gm == "ring" else "ghost"
+        s1g, d1g = edges_from_neighbor_lists(out_g[0], out_g[1])
+        s2g, d2g = edges_from_neighbor_lists(out_g[3], out_g[4])
+        gg = EpsGraph(n, _np.concatenate([s1g, s2g]),
+                      _np.concatenate([d1g, d2g]))
+        return gg, dt_g, int(stats_g.comm_bytes[ch])
+
+    g_coll, dt_coll, by_coll = timed_ghost("coll")
+    g_ring, dt_ring, by_ring = timed_ghost("ring")
+    assert g_ring == g_coll, "ghost ring vs coll edge mismatch"
+    ghost_ab = {
+        "m_centers": m_fine,
+        "coll": {"ghost_bytes": by_coll, "elapsed_s": round(dt_coll, 4)},
+        "ring": {"ghost_bytes": by_ring, "elapsed_s": round(dt_ring, 4)},
+        # > 1 means the ring moves fewer ghost-exchange bytes (gated by CI)
+        "bytes_reduction_x": round(by_coll / max(by_ring, 1), 3),
+        "auto_pick": resolve_ghost_mode("auto", plan_f, d["dim"],
+                                        pts.dtype.itemsize, nranks),
+    }
+
+    # ghost bytes vs eps at the same fine partition: the coll curve climbs
+    # with the ghost population while the ring stays flat, crossing between
+    # the first and second sweep quantile — the record "auto" consults
+    ghost_vs_eps = []
+    for e_q in sweep:
+        p_q = plan_landmark_device(pts, cpts_f,
+                                   _np.asarray(f_fine, _np.int32),
+                                   float(e_q), mesh, k_cap=128)
+        cb = ghost_coll_bytes(nranks, p_q.cap_ghost, d["dim"],
+                              pts.dtype.itemsize)
+        rb = ghost_ring_bytes(nranks, p_q.cap_rank, d["dim"],
+                              pts.dtype.itemsize, m_fine)
+        ghost_vs_eps.append({
+            "eps": round(float(e_q), 4), "cap_ghost": p_q.cap_ghost,
+            "coll_bytes": int(cb), "ring_bytes": int(rb),
+            "auto": resolve_ghost_mode("auto", p_q, d["dim"],
+                                       pts.dtype.itemsize, nranks)})
+
     # per-rank coalesce/ghost buffer row counts + payload bytes (pts+id+cell)
     lw = nranks * plan.cap_coal
     lg = nranks * plan.cap_ghost
@@ -371,8 +436,11 @@ def bench_landmark_device(json_path: str = "BENCH_landmark.json"):
                          dists_tiles / max(dists_tree, 1), 2)},
         },
         "tile_bytes_per_rank": tile_bytes,
+        "ghost_ab": ghost_ab,
+        "ghost_vs_eps": ghost_vs_eps,
         "plan": {k: getattr(plan, k) for k in
-                 ("m_centers", "cap_coal", "cap_ghost", "g_per_pt", "k_cap")},
+                 ("m_centers", "cap_coal", "cap_ghost", "g_per_pt", "k_cap",
+                  "cap_rank")},
     }
     with open(json_path, "w") as fh:
         json.dump(res, fh, indent=1)
@@ -380,7 +448,9 @@ def bench_landmark_device(json_path: str = "BENCH_landmark.json"):
          f"edges_per_s={res['edges_per_s']};skip_rate="
          f"{res['tiles']['skip_rate']};tile_bytes_reduction="
          f"{tile_bytes['reduction_x']}x;tree_dist_reduction="
-         f"{res['traversal']['tree']['dist_reduction_x']}x;json={json_path}")
+         f"{res['traversal']['tree']['dist_reduction_x']}x;"
+         f"ghost_bytes_reduction={ghost_ab['bytes_reduction_x']}x;"
+         f"json={json_path}")
     return res
 
 
@@ -429,19 +499,61 @@ def bench_systolic_device(json_path: str = "BENCH_systolic.json"):
     forest_ab = _forest_build_ab(
         lambda: stack_device_forests(build_block_forests(pts, nranks)),
         lambda: build_block_forests(pts, nranks, backend="device"))
+    # On blocked clusters the device builder warm-starts from
+    # estimate_max_levels like everywhere else, but its remaining deficit
+    # vs the host covertree is hub-iteration-bound, NOT warm-up-bound:
+    # the speedup is flat (~0.8-0.9x) across max_levels 4..12 on this
+    # workload, while the host build is unusually cheap because clustered
+    # data collapses after ~4 levels. The corel-like builds (the other
+    # two JSONs) are level-count-bound and the estimate wins there.
+    forest_ab["note"] = "deficit is Alg-1 hub-iteration cost, not warm-up"
     g_ser, dt_ser = timed("tiles", overlap=False)
     assert g_ser == g, "serial vs double-buffered ring edge mismatch"
     st, st_tree = g.stats, g_tree.stats
 
     # strong scaling over ring sizes: same workload, same steady-state
-    # timing, submeshes of the available devices
-    scaling = {"nranks": [], "elapsed_s": [], "edges_per_s": []}
+    # timing, submeshes of the available devices. Each entry carries a
+    # comm/kernel wall-clock split: the 1-rank run has no ring traffic, so
+    # its dists/second is the pure kernel rate on this host; kernel_s_est
+    # scales each run's ACTUAL distance count by that rate and comm_s_est
+    # is the remainder (permute + dispatch + simulated-rank serialization).
+    scaling = {"nranks": [], "elapsed_s": [], "edges_per_s": [],
+               "dists_evaluated": [], "skip_rate": [],
+               "kernel_s_est": [], "comm_s_est": []}
     for k in sorted({r for r in (1, 2, 4, nranks) if r <= nranks}):
         gk, dtk = timed("tiles", mesh=make_nng_mesh(k), reps=2)
         assert gk == g, f"scaling mesh {k} edge mismatch"
         scaling["nranks"].append(k)
         scaling["elapsed_s"].append(round(dtk, 4))
         scaling["edges_per_s"].append(round(gk.num_edges / max(dtk, 1e-9), 1))
+        scaling["dists_evaluated"].append(int(gk.stats.dists_evaluated))
+        scaling["skip_rate"].append(round(gk.stats.tile_skip_rate, 4))
+    kernel_rate = scaling["dists_evaluated"][0] / max(
+        scaling["elapsed_s"][0], 1e-9)          # dists/s, comm-free run
+    for dists, dtk in zip(scaling["dists_evaluated"], scaling["elapsed_s"]):
+        ks = dists / max(kernel_rate, 1e-9)
+        scaling["kernel_s_est"].append(round(ks, 4))
+        scaling["comm_s_est"].append(round(max(dtk - ks, 0.0), 4))
+    # same split for the headline full-mesh run, carried on its RunStats
+    st.kernel_s_est = round(st.dists_evaluated / max(kernel_rate, 1e-9), 4)
+    st.comm_s_est = round(max(dt - st.kernel_s_est, 0.0), 4)
+    # Why edges/s is NON-MONOTONE in nranks on this workload: the ring
+    # schedule halves the symmetric work at every size, so total distances
+    # evaluated stay ~flat from 1 -> 2 -> 4 ranks — splitting the blocks
+    # does not shrink the work, it only adds per-hop dispatch, and on a
+    # host-simulated mesh all "ranks" serialize onto one CPU, so elapsed
+    # grows with the overhead (comm_s_est above). Block-summary pruning
+    # cannot rescue 2/4 ranks here: blocked-clusters has nranks clusters,
+    # so 2- and 4-rank blocks SPAN several clusters and every block pair
+    # stays within summary reach (skip_rate 0). At nranks ranks the blocks
+    # align 1:1 with the clusters, most cross-block tiles prune, and
+    # edges/s jumps. Real multi-host meshes run ranks concurrently, which
+    # removes the serialization term but not the flat-work term.
+    scaling_note = ("edges/s dips at 2/4 ranks: symmetric-halving keeps "
+                    "total distance work ~flat while per-hop overhead grows "
+                    "(see comm_s_est); block-summary pruning only fires "
+                    "once blocks align with the data's clusters at "
+                    f"{nranks} ranks — see skip_rate per entry")
 
     res = {
         "workload": {"name": "blocked-clusters", "n": n, "dim": dim,
@@ -449,6 +561,8 @@ def bench_systolic_device(json_path: str = "BENCH_systolic.json"):
         "pallas_mode": pallas_mode(),
         "edges": g.num_edges,
         "elapsed_s": round(dt, 4),
+        "kernel_s_est": st.kernel_s_est,
+        "comm_s_est": st.comm_s_est,
         # forest-construction wall clock (warm device build, the backend
         # the tree path above actually ran with), SEPARATE from elapsed_s
         "build_s": forest_ab["device_s"],
@@ -467,6 +581,7 @@ def bench_systolic_device(json_path: str = "BENCH_systolic.json"):
             "speedup_x": round(dt_ser / max(dt, 1e-9), 3),
         },
         "scaling": scaling,
+        "scaling_note": scaling_note,
         "scaling_edges_per_s_max_ranks": scaling["edges_per_s"][-1],
         "tiles": {"scheduled": int(st.tiles_scheduled),
                   "skipped": int(st.tiles_skipped),
@@ -509,6 +624,7 @@ TREND_METRICS = (
     ("ring_bytes_total", False),
     ("build_s", False),                 # warm device forest build seconds
     ("forest_build.speedup_x", True),   # host / device build-time ratio
+    ("ghost_ab.bytes_reduction_x", True),   # coll / ring ghost bytes
 )
 
 

@@ -270,6 +270,57 @@ def default_contracts() -> list[KernelContract]:
             out_dtypes=(i32, u32),
         ),
         KernelContract(
+            name="nng_tile_ghost",
+            kernel_trace=lambda: (
+                lambda x, y, gb, yg: nt.nng_tile_ghost_pallas(
+                    x, y, gb, yg, _EPS_L2, tq=256, tp=512),
+                (_sds((256, 8), f32), _sds((512, 8), f32),
+                 _sds((256, 1), u32), _sds((512,), i32))),
+            oracle_trace=lambda: (
+                lambda x, y, gb, yg: nt.nng_tile_ghost_ref(
+                    x, y, gb, yg, _EPS_L2),
+                (_sds((256, 8), f32), _sds((512, 8), f32),
+                 _sds((256, 1), u32), _sds((512,), i32))),
+            canonical_thresholds=(eps2,),
+            shape_invariants=((256, 256, "q % tq"), (512, 512, "p % tp"),
+                              (512, 32, "tp % 32")),
+            out_dtypes=(i32, u32),
+        ),
+        KernelContract(
+            name="nng_tile_ghost_hamming",
+            kernel_trace=lambda: (
+                lambda x, y, gb, yg: nt.nng_tile_ghost_hamming_pallas(
+                    x, y, gb, yg, _EPS_HAM, tq=128, tp=256, wchunk=8),
+                (_sds((128, 8), u32), _sds((256, 8), u32),
+                 _sds((128, 1), u32), _sds((256,), i32))),
+            oracle_trace=lambda: (
+                lambda x, y, gb, yg: nt.nng_tile_ghost_hamming_ref(
+                    x, y, gb, yg, _EPS_HAM),
+                (_sds((128, 8), u32), _sds((256, 8), u32),
+                 _sds((128, 1), u32), _sds((256,), i32))),
+            canonical_thresholds=(),
+            shape_invariants=((128, 128, "q % tq"), (256, 256, "p % tp"),
+                              (256, 32, "tp % 32"), (8, 8, "w % wchunk")),
+            out_dtypes=(i32, u32),
+        ),
+        KernelContract(
+            name="nng_tile_ghost_l1",
+            kernel_trace=lambda: (
+                lambda x, y, gb, yg: nt.nng_tile_ghost_l1_pallas(
+                    x, y, gb, yg, _EPS_L2, tq=128, tp=256, cchunk=8),
+                (_sds((128, 8), f32), _sds((256, 8), f32),
+                 _sds((128, 1), u32), _sds((256,), i32))),
+            oracle_trace=lambda: (
+                lambda x, y, gb, yg: nt.nng_tile_ghost_l1_ref(
+                    x, y, gb, yg, _EPS_L2),
+                (_sds((128, 8), f32), _sds((256, 8), f32),
+                 _sds((128, 1), u32), _sds((256,), i32))),
+            canonical_thresholds=(eps_f32,),
+            shape_invariants=((128, 128, "q % tq"), (256, 256, "p % tp"),
+                              (256, 32, "tp % 32"), (8, 8, "d % cchunk")),
+            out_dtypes=(i32, u32),
+        ),
+        KernelContract(
             name="tree_frontier",
             kernel_trace=lambda: (
                 lambda q, c, rad, leaf, act: tf.tree_frontier_pallas(

@@ -22,6 +22,10 @@ Channel attribution works on the traced per-rank avals:
 - ``all_to_all`` is landmark-only: classified ``coalesce`` vs ``ghost``
   by the capacity axis (requires an audit plan with
   ``cap_coal != cap_ghost``).
+- ``ppermute`` of a (cap_rank, dim) metric-dtype block anchors
+  ``ghost_ring`` (the landmark ring ghost phase; the audit plan keeps
+  ``cap_rank`` distinct from ``n_loc`` so the ring-points rule cannot
+  shadow it) — the visiting ids and packed Lemma-1 ghost bits inherit.
 - Anything else (id scalars/vectors, counts, the 7 non-coords forest
   tables) inherits the previous event's channel: the traced equation
   order follows the python call order of the engine bodies, and every
@@ -86,7 +90,7 @@ def collect_collectives(jaxpr) -> tuple[list[CollectiveEvent], int]:
 
 def classify_events(events, *, n_loc, dim, k_cap, met_dtype,
                     coords_shape=None, cap_coal=None, cap_ghost=None,
-                    subject="traffic") -> list[Diagnostic]:
+                    cap_rank=None, subject="traffic") -> list[Diagnostic]:
     """Assign each event a channel in place; RA201 for unattributable."""
     diags = []
     met_dtype = np.dtype(met_dtype)
@@ -102,7 +106,10 @@ def classify_events(events, *, n_loc, dim, k_cap, met_dtype,
                 elif ev.shape[1] == cap_ghost:
                     ch = "ghost"
         elif ev.prim == "ppermute":
-            if ev.shape == (n_loc, dim) and ev.dtype == met_dtype:
+            if cap_rank is not None and ev.shape == (cap_rank, dim) \
+                    and ev.dtype == met_dtype:
+                ch = "ghost_ring"
+            elif ev.shape == (n_loc, dim) and ev.dtype == met_dtype:
                 ch = "ring_points"
             elif ev.shape == (n_loc, k_cap) and ev.dtype == np.int32:
                 ch = "ring_mirror"
@@ -222,25 +229,28 @@ def audit_systolic(*, nranks=8, n=1024, dim=8, k_cap=64, eps=0.25,
 
 
 def audit_landmark(*, nranks=8, n=1024, dim=8, eps=0.25,
-                   traversal="tiles"):
+                   traversal="tiles", ghost_mode="coll"):
     """-> (diags, derived, formula, jaxpr, subject) for one landmark
     config. The audit plan fixes cap_coal != cap_ghost so the two
-    all_to_all groups are distinguishable by their capacity axis."""
+    all_to_all groups are distinguishable by their capacity axis, and
+    cap_rank != n_loc so the ring ghost block cannot shadow the
+    ring-points rule."""
     from repro.core.distributed import device as dev
     from repro.nng import SpatialPartitionEngine
 
-    subject = f"landmark[traversal={traversal}]"
+    subject = f"landmark[traversal={traversal},ghost={ghost_mode}]"
     mesh = dev.make_nng_mesh(nranks)
     pts = _audit_points(n, dim, nranks)
     plan = dev.LandmarkPlan(m_centers=16, cap_coal=48, cap_ghost=64,
-                            g_per_pt=4, k_cap=32)
+                            g_per_pt=4, k_cap=32, cap_rank=96)
     engine = SpatialPartitionEngine(
         pts, eps, mesh, "euclidean", m_centers=plan.m_centers, plan=plan,
-        traversal=traversal, forest_backend="host")
+        traversal=traversal, forest_backend="host", ghost_mode=ghost_mode)
     formula = engine._landmark_comm_bytes(plan)
 
     fn = dev._landmark_fn(mesh, float(eps), engine.metric, plan, "ring",
-                          dev._pallas_mode(), traversal, "host")
+                          dev._pallas_mode(), traversal, "host",
+                          ghost_mode)
     args = [jax.ShapeDtypeStruct((n, dim), engine.metric.dtype),
             jax.ShapeDtypeStruct((n,), np.int32),
             _sds_like(engine.centers.astype(engine.metric.dtype)),
@@ -261,7 +271,7 @@ def audit_landmark(*, nranks=8, n=1024, dim=8, eps=0.25,
     diags += classify_events(
         events, n_loc=n // nranks, dim=dim, k_cap=plan.k_cap,
         met_dtype=engine.metric.dtype, cap_coal=plan.cap_coal,
-        cap_ghost=plan.cap_ghost, subject=subject)
+        cap_ghost=plan.cap_ghost, cap_rank=plan.cap_rank, subject=subject)
     derived = _derived_bytes(events, nranks)
     diags += _cross_check(derived, formula, subject)
     return diags, derived, formula, jaxpr, subject
@@ -275,8 +285,10 @@ SYSTOLIC_CONFIGS = (
     dict(traversal="tree", overlap=False, prune=True),
 )
 LANDMARK_CONFIGS = (
-    dict(traversal="tiles"),
-    dict(traversal="tree"),
+    dict(traversal="tiles", ghost_mode="coll"),
+    dict(traversal="tree", ghost_mode="coll"),
+    dict(traversal="tiles", ghost_mode="ring"),
+    dict(traversal="tree", ghost_mode="ring"),
 )
 
 

@@ -83,9 +83,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map as _shard_map
 from repro.core.metrics import get_metric
-from repro.kernels import (nng_tile_bits, nng_tile_bits_grouped,
-                           nng_tile_bits_pair, nng_tile_geometry,
-                           tree_frontier_step)
+from repro.kernels import (nng_tile_bits, nng_tile_bits_ghost,
+                           nng_tile_bits_grouped, nng_tile_bits_pair,
+                           nng_tile_geometry, tree_frontier_step)
 from repro.kernels.nng_tile import _pack_words
 from repro.kernels.tree_frontier import _unpack_words
 from repro.kernels.ops import pallas_mode as _pallas_mode
@@ -151,7 +151,7 @@ def _popcount_rows(bits):
 
 
 def tree_traverse(qp, qids, qcells, forest: DeviceForest, eps, k_cap: int,
-                  metric: str):
+                  metric: str, qghost_bits=None):
     """Level-synchronous batched cover-tree traversal on device.
 
     A ``lax.scan`` over the forest's levels. Each level:
@@ -159,7 +159,12 @@ def tree_traverse(qp, qids, qcells, forest: DeviceForest, eps, k_cap: int,
       1. active mask (jnp): a node is active for a query iff its parent's
          expand bit survived the previous level, the slot is valid, and the
          node's cell matches the query's cell (the in-cell scoping that
-         makes cells the level-1 cover).
+         makes cells the level-1 cover). With ``qghost_bits`` (the ring
+         ghost path: (nq, ceil(m/32)) packed per-query cell sets from the
+         slacked Lemma-1 test) the equality test generalizes to membership
+         — a node is in scope iff its cell's bit is set for the query —
+         so one traversal visits every locally-owned cell the visiting
+         point ghosts into; ``qcells`` is ignored (pass ``None``).
       2. frontier kernel (``repro.kernels.tree_frontier``): fused distance
          + {emit, expand} decisions, packed survivor bitmasks; blocks with
          no active pair are skipped without touching the MXU.
@@ -181,7 +186,8 @@ def tree_traverse(qp, qids, qcells, forest: DeviceForest, eps, k_cap: int,
     nq = qp.shape[0]
     L, N = forest.radius.shape
     n_leaf = forest.leaf_ids.shape[0]
-    qcells = jnp.asarray(qcells, jnp.int32)
+    if qghost_bits is None:
+        qcells = jnp.asarray(qcells, jnp.int32)
 
     ones = jnp.full((nq, N // 32), jnp.uint32(0xFFFFFFFF))
     delta0 = jnp.zeros((nq, n_leaf + 1), jnp.int32)
@@ -193,7 +199,13 @@ def tree_traverse(qp, qids, qcells, forest: DeviceForest, eps, k_cap: int,
         pb = (parent % 32).astype(jnp.uint32)
         pwords = jnp.take(prev_bits, pw, axis=1)            # (nq, N)
         pbit = ((pwords >> pb[None, :]) & 1) == 1
-        active = pbit & (cell[None, :] >= 0) & (cell[None, :] == qcells[:, None])
+        if qghost_bits is None:
+            in_scope = cell[None, :] == qcells[:, None]
+        else:
+            c = jnp.maximum(cell, 0)
+            cw = jnp.take(qghost_bits, c // 32, axis=1)     # (nq, N)
+            in_scope = ((cw >> (c % 32).astype(jnp.uint32)[None, :]) & 1) == 1
+        active = pbit & (cell[None, :] >= 0) & in_scope
         act_bits = _pack_words(active)
         emit_bits, exp_bits = tree_frontier_step(
             qp, coords, rad, leaf, act_bits, eps, metric)
@@ -798,6 +810,43 @@ class LandmarkPlan:
     cap_ghost: int      # per (src, dst) rank-pair ghost capacity (copies)
     g_per_pt: int       # max cells one point may ghost into
     k_cap: int          # neighbor-list capacity
+    cap_rank: int = 0   # max coalesced points on any ONE rank (ring ghost
+    #                     block height; 0 = unplanned, coll-only plan)
+
+
+def ghost_coll_bytes(nranks: int, cap_ghost: int, dim: int,
+                     itemsize: int) -> int:
+    """Exact planned bytes of the collective (all_to_all) ghost exchange:
+    every rank ships nranks × cap_ghost capacity-padded rows of
+    (point, id, cell) regardless of how many ghosts actually exist."""
+    row = itemsize * dim + 4 + 4            # pts + int32 id + int32 cell
+    return nranks * nranks * cap_ghost * row
+
+
+def ghost_ring_bytes(nranks: int, cap_rank: int, dim: int, itemsize: int,
+                     m_centers: int) -> int:
+    """Exact planned bytes of the ring ghost exchange: nranks // 2 hops of
+    the compacted (cap_rank, dim) block + ids + packed Lemma-1 ghost bits
+    (ceil(m/32) uint32 words per row), per rank. Eps-independent — the
+    ghost TEST travels as bits instead of materialized ghost copies."""
+    mw = (m_centers + 31) // 32
+    row = itemsize * dim + 4 + mw * 4       # pts + int32 id + gbits words
+    return nranks * (nranks // 2) * cap_rank * row
+
+
+def resolve_ghost_mode(ghost_mode: str, plan: "LandmarkPlan", dim: int,
+                       itemsize: int, nranks: int) -> str:
+    """Resolve ``"auto"`` to ``"coll"`` / ``"ring"`` from the exact byte
+    models above (ring wins iff it moves strictly fewer planned bytes).
+    Plans without ``cap_rank`` (hand-built / heuristic) stay ``"coll"``."""
+    if ghost_mode != "auto":
+        return ghost_mode
+    if plan.cap_rank <= 0:
+        return "coll"
+    ring = ghost_ring_bytes(nranks, plan.cap_rank, dim, itemsize,
+                            plan.m_centers)
+    coll = ghost_coll_bytes(nranks, plan.cap_ghost, dim, itemsize)
+    return "ring" if ring < coll else "coll"
 
 
 def plan_landmark(
@@ -839,10 +888,14 @@ def _plan_count_local(x, centers, f, *, axis, nranks, eps, two_eps_c,
     gcol = jnp.sum(gmask.astype(jnp.int32), axis=0)
     ghost = jnp.zeros((nranks,), jnp.int32).at[f].add(gcol)
     # all-reduce the maxima across ranks (one collective each)
-    coal_max = jnp.max(jax.lax.all_gather(coal, axis))
+    coal_all = jax.lax.all_gather(coal, axis)   # (src, dst) coalesce counts
+    coal_max = jnp.max(coal_all)
     ghost_max = jnp.max(jax.lax.all_gather(ghost, axis))
     gpp_max = jnp.max(jax.lax.all_gather(g_per_pt[None], axis))
-    return coal_max[None], ghost_max[None], gpp_max[None]
+    # total rows any ONE rank receives in coalesce = the compacted block
+    # height the ring ghost path rotates (column sums of the src×dst table)
+    rank_tot = jnp.max(jnp.sum(coal_all, axis=0))
+    return coal_max[None], ghost_max[None], gpp_max[None], rank_tot[None]
 
 
 @functools.lru_cache(maxsize=64)
@@ -854,7 +907,7 @@ def _plan_count_fn(mesh, eps, metric, axis, pallas_mode):
     return jax.jit(_shard_map(
         body, mesh,
         in_specs=(P(axis, None), P(), P()),
-        out_specs=(P(axis), P(axis), P(axis)),
+        out_specs=(P(axis), P(axis), P(axis), P(axis)),
     ))
 
 
@@ -878,15 +931,16 @@ def plan_landmark_device(
     n, _ = points.shape
     assert n % nranks == 0, (n, nranks)
     fn = _plan_count_fn(mesh, float(eps), met, axis, _pallas_mode())
-    coal, ghost, gpp = fn(jnp.asarray(points, met.dtype),
-                          jnp.asarray(centers, met.dtype),
-                          jnp.asarray(f, jnp.int32))
+    coal, ghost, gpp, rank_tot = fn(jnp.asarray(points, met.dtype),
+                                    jnp.asarray(centers, met.dtype),
+                                    jnp.asarray(f, jnp.int32))
     return LandmarkPlan(
         m_centers=int(np.asarray(centers).shape[0]),
         cap_coal=int(np.asarray(coal)[0]) + pad,
         cap_ghost=max(int(np.asarray(ghost)[0]), 1) + pad,
         g_per_pt=max(int(np.asarray(gpp)[0]), 1),
         k_cap=k_cap,
+        cap_rank=int(np.asarray(rank_tot)[0]) + pad,
     )
 
 
@@ -950,9 +1004,109 @@ def _cell_sort(key_cell, valid, m, *arrays):
     return tuple(a[order] for a in arrays)
 
 
+def _ghost_ring(W, Wids, Wcell, Wvalid, Wgrp, centers, forest, *, axis,
+                nranks, eps, two_eps_c, metric, plan, traversal):
+    """Ring ghost phase (``ghost_mode="ring"``): the ε-ghost exchange as a
+    systolic rotation of the COMPACTED coalesce buffer instead of the
+    capacity-padded all_to_all scatter.
+
+    Each rank compacts its cell-sorted W buffer to the planner's exact
+    ``cap_rank`` block (valid rows first — the cell sort clusters padding
+    at the end), computes the slacked Lemma-1 ghost test ONCE at home as a
+    packed per-row cell bitset (own cell cleared, invalid rows zeroed),
+    and rotates (block, ids, gbits) around the mesh with the PR 6
+    double-buffering discipline: round r+1's ``ppermute`` is issued before
+    round r's kernels consume the already-received block. The gbits travel
+    WITH the block — recomputing them per hop would let fp32 argmin
+    near-ties diverge between ranks and silently drop edges.
+
+    Per round, the visiting rows query the LOCAL cells only within their
+    ghost set: the tiles flavor runs the ghost-aware fused bitmask kernel
+    (``nng_tile_bits_ghost`` — bitset membership replaces group equality
+    in VMEM), the tree flavor the cover-tree traversal with
+    ``qghost_bits`` scoping. Results stay local — the visiting ids arrived
+    with the block, so the per-round hit tables need no return trip and
+    there is no traveling mirror accumulator; the CSR assembly symmetrizes
+    directed pairs. Round 0 (own block vs own cells) covers same-rank
+    cross-cell pairs; rounds 1..nranks//2 cover every rank pair because
+    Lemma 1 holds in both directions of an ε-pair, so ONE visiting
+    direction suffices — and on an even ring the boundary round, where the
+    pair {me, me+R} meets at both ends, is evaluated by the lower rank
+    only. No cap_ghost / g_per_pt capacities exist on this path; overflow
+    means the valid coalesce rows outgrew ``cap_rank``.
+    """
+    m = centers.shape[0]
+    B = plan.cap_rank
+    k_cap = plan.k_cap
+    me = jax.lax.axis_index(axis)
+    perm = [(i, (i - 1) % nranks) for i in range(nranks)]
+    rounds = nranks // 2
+
+    Wb, Wbids, Wbcell, Wbvalid = W[:B], Wids[:B], Wcell[:B], Wvalid[:B]
+    over = (jnp.sum(Wvalid.astype(jnp.int32)) > B)
+
+    dpc_w = tile_cdist(Wb, centers, metric)
+    d_min_w = jnp.min(dpc_w, axis=1)
+    tru_w, gbound_w = _lemma1_ghost_bound(Wb, centers, dpc_w, d_min_w,
+                                          two_eps_c, metric)
+    gmask = ((tru_w <= gbound_w[:, None])
+             & (jnp.arange(m)[None, :] != Wbcell[:, None])
+             & Wbvalid[:, None])
+    mw = (m + 31) // 32
+    gbits = _pack_words(jnp.pad(gmask, ((0, 0), (0, mw * 32 - m))))
+
+    zeros = (jnp.full((B, k_cap), SENTINEL, jnp.int32),
+             jnp.zeros((B,), jnp.int32), jnp.int32(0), jnp.int32(0),
+             jnp.float32(0), jnp.float32(0))
+
+    def eval_block(bp, bi, bg):
+        if traversal == "tree":
+            nbrs_r, cnt_r, d_r, p_r = tree_traverse(
+                bp, bi, None, forest, eps, k_cap, metric, qghost_bits=bg)
+            return nbrs_r, cnt_r, jnp.int32(0), jnp.int32(0), d_r, p_r
+        cnt_r, bits_r, sch_r, skp_r = nng_tile_bits_ghost(
+            bp, W, bg, Wgrp, eps, metric=metric)
+        nbrs_r = _bits_to_gathered_ids(bits_r, Wids, k_cap)
+        tq, tp = nng_tile_geometry(B, W.shape[0], metric)
+        d_r = (sch_r - skp_r).astype(jnp.float32) * jnp.float32(tq * tp)
+        return nbrs_r, cnt_r, sch_r, skp_r, d_r, jnp.float32(0)
+
+    ids_parts, nbr_parts, cnt_parts = [], [], []
+    sched = skip = jnp.int32(0)
+    dists = pruned = jnp.float32(0)
+    blk = (Wb, Wbids, gbits)
+    for r in range(rounds + 1):
+        if r < rounds:
+            # double buffering: issue round r+1's hop BEFORE this round's
+            # kernels touch the already-received block — the permute and
+            # the evaluation share no data dependency, so they overlap
+            nxt = tuple(jax.lax.ppermute(a, axis, perm) for a in blk)
+        bp, bi, bg = blk
+        if r == rounds and rounds > 0 and nranks % 2 == 0:
+            partner = (me + rounds) % nranks
+            out = jax.lax.cond(me < partner,
+                               lambda: eval_block(bp, bi, bg),
+                               lambda: zeros)
+        else:
+            out = eval_block(bp, bi, bg)
+        nbrs_r, cnt_r, sch_r, skp_r, d_r, p_r = out
+        ids_parts.append(bi)
+        nbr_parts.append(nbrs_r)
+        cnt_parts.append(cnt_r)
+        sched, skip = sched + sch_r, skip + skp_r
+        dists, pruned = dists + d_r, pruned + p_r
+        if r < rounds:
+            blk = nxt
+    Gids = jnp.concatenate(ids_parts)
+    gnbrs = jnp.concatenate(nbr_parts)
+    gcnt = jnp.concatenate(cnt_parts)
+    over = over | jnp.any(gcnt > k_cap)
+    return Gids, gnbrs, gcnt, over, sched, skip, dists, pruned
+
+
 def _landmark_local(
     x, ids, centers, f, *tree_args, axis, nranks, eps, two_eps_c,
-    metric, plan, traversal="tiles",
+    metric, plan, traversal="tiles", ghost_mode="coll",
 ):
     """Per-shard landmark body. x (n_loc, d); centers (m, d) replicated;
     f (m,) cell->rank assignment (host-planned LPT).
@@ -1022,6 +1176,26 @@ def _landmark_local(
         w_pruned = jnp.float32(0)
 
     # -- Phase 4: ε-ghost exchange (Lemma 1, scale-aware fp32 slack) --------
+    if ghost_mode == "ring":
+        # ring flavor: no ghost copies are ever materialized — the
+        # compacted coalesce block rotates and the Lemma-1 test rides
+        # along as packed per-row cell bits (see ``_ghost_ring``)
+        (Gids, gnbrs, gcnt, g_over, g_sched, g_skip, g_dists,
+         g_pruned) = _ghost_ring(
+            W, Wids, Wcell, Wvalid, Wgrp, centers, forest, axis=axis,
+            nranks=nranks, eps=eps, two_eps_c=two_eps_c, metric=metric,
+            plan=plan, traversal=traversal)
+        overflow = (
+            (dropped_c > 0) | g_over | jnp.any(cnt > plan.k_cap)
+        )[None]
+        tiles_skipped = (w_skip + g_skip).astype(jnp.float32)[None]
+        tiles_scheduled = (w_sched + g_sched).astype(jnp.float32)[None]
+        dists_evaluated = (w_dists + g_dists)[None]
+        nodes_pruned = (w_pruned + g_pruned)[None]
+        return (Wids, nbrs, cnt, Gids, gnbrs, gcnt, overflow,
+                tiles_skipped, tiles_scheduled, dists_evaluated,
+                nodes_pruned)
+
     tru, gbound = _lemma1_ghost_bound(x, centers, dpc, d_min, two_eps_c,
                                       metric)
     gmask = (tru <= gbound[:, None]) & (
@@ -1097,8 +1271,15 @@ def landmark_run(
     forest: dict | None = None,
     cell=None,
     forest_backend: str = "host",
+    ghost_mode: str = "coll",
 ):
-    """Distributed landmark ε-NNG (collective ghosts). Returns
+    """Distributed landmark ε-NNG. ``ghost_mode`` selects the Phase 4
+    schedule: ``"coll"`` (capacity-padded all_to_all scatter of ghost
+    copies) or ``"ring"`` (double-buffered rotation of the compacted
+    coalesce block with in-kernel Lemma-1 scoping — needs
+    ``plan.cap_rank`` from ``plan_landmark_device``). ``"auto"`` must be
+    resolved upstream (``resolve_ghost_mode``) — the mode is part of the
+    compiled program. Returns
     (Wids, nbrs, cnt, Gids, gnbrs, gcnt, overflow, tiles_skipped,
     tiles_scheduled, dists_evaluated, nodes_pruned): owned-point and
     ghost-copy neighbor lists keyed by global point id, plus per-rank
@@ -1121,8 +1302,15 @@ def landmark_run(
     n, _ = points.shape
     assert n % nranks == 0, (n, nranks)
     ids = jnp.arange(n, dtype=jnp.int32)
+    assert ghost_mode in ("coll", "ring"), (
+        f"ghost_mode={ghost_mode!r}: 'auto' is resolved upstream "
+        "(resolve_ghost_mode) — the engine compiles one mode")
+    if ghost_mode == "ring":
+        assert plan.cap_rank > 0, (
+            "ghost_mode='ring' needs plan.cap_rank (use "
+            "plan_landmark_device, or set cap_rank explicitly)")
     fn = _landmark_fn(mesh, float(eps), met, plan, axis, _pallas_mode(),
-                      traversal, forest_backend)
+                      traversal, forest_backend, ghost_mode)
     points = jnp.asarray(points, met.dtype)
     centers = jnp.asarray(centers, met.dtype)
     f = jnp.asarray(f, jnp.int32)
@@ -1149,15 +1337,19 @@ def landmark_nng(points, eps, centers, f, mesh, plan, **kw):
 
 @functools.lru_cache(maxsize=64)
 def _landmark_fn(mesh, eps, metric, plan, axis, pallas_mode,
-                 traversal="tiles", forest_backend="host"):
+                 traversal="tiles", forest_backend="host",
+                 ghost_mode="coll"):
     """Memoized jitted shard_map program (see ``_systolic_fn``, including
     the ``pallas_mode`` and ``forest_backend`` keys); the frozen
     ``LandmarkPlan`` is the static capacity key, so only genuine re-plans
-    (grown capacities) pay a recompile."""
+    (grown capacities) pay a recompile. ``ghost_mode`` (resolved "coll" /
+    "ring", never "auto") keys the Phase 4 schedule — the two modes are
+    different collective programs with different output shapes."""
     nranks = mesh.shape[axis]
     body = functools.partial(
         _landmark_local, axis=axis, nranks=nranks, eps=eps,
-        two_eps_c=2.0 * eps, metric=metric, plan=plan, traversal=traversal)
+        two_eps_c=2.0 * eps, metric=metric, plan=plan, traversal=traversal,
+        ghost_mode=ghost_mode)
     in_specs = (P(axis, None), P(axis), P(), P())
     if traversal == "tree":
         in_specs = in_specs + (P(axis),) * (1 + _N_FOREST)   # cell + forest

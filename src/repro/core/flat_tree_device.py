@@ -325,8 +325,37 @@ def _build_stacked(ptsb, cellsb, gidsb, tslotb, met, leaf_size,
 # public builders (the backend="device" paths of flat_tree.build_*_forests)
 # ---------------------------------------------------------------------------
 
+def estimate_max_levels(points, met, sample: int = 256) -> int:
+    """Host-side warm start for the regrow loop.
+
+    The hub split halves the radius every level (Alg. 1 terminates a hub
+    at ``hmax <= hubr * 0.5``), so the forest depth is ~log2(span /
+    leaf spacing). Both scales come from a small sample: ``r0`` = max
+    true distance from the sample's first point, ``delta`` = median
+    nearest-neighbor distance within the sample. Build cost is linear in
+    ``max_levels`` (the level loop runs to the cap even when lower
+    levels are empty), so slack is expensive: +1 level of headroom,
+    clamped to [4, 64]. Underestimates are safe but slow — the regrow
+    loop doubles and rebuilds on EVERY call, so a chronic undershoot
+    pays ~3x — which is why the slack is not 0.
+    """
+    pts = np.asarray(points)
+    if len(pts) < 2:
+        return 4
+    idx = np.linspace(0, len(pts) - 1, min(sample, len(pts))).astype(np.int64)
+    hm = met.host
+    dm = np.asarray(hm.true(hm.cdist(pts[idx], pts[idx])), np.float64)
+    r0 = float(dm[0].max())
+    np.fill_diagonal(dm, np.inf)
+    delta = float(np.median(dm.min(axis=1)))
+    if not np.isfinite(delta) or delta <= 0.0 or r0 <= delta:
+        return 8
+    return int(np.clip(int(np.ceil(np.log2(r0 / delta))) + 1, 4, 64))
+
+
 def build_block_forests_device(points, nranks: int, metric="euclidean",
-                               leaf_size: int = 10, max_levels: int = 8,
+                               leaf_size: int = 10,
+                               max_levels: int | None = None,
                                *, include_child_ranges: bool = False):
     """Systolic engine forests on device: one tree per contiguous block.
 
@@ -336,6 +365,8 @@ def build_block_forests_device(points, nranks: int, metric="euclidean",
     """
     met = _as_device_metric(metric)
     pts = np.asarray(points)
+    if max_levels is None:
+        max_levels = estimate_max_levels(pts, met)
     n = len(pts)
     assert n % nranks == 0, (n, nranks)
     n_loc = n // nranks
@@ -357,7 +388,7 @@ def build_block_forests_device(points, nranks: int, metric="euclidean",
 
 def build_cell_forests_device(points, cell, f, nranks: int,
                               metric="euclidean", leaf_size: int = 10,
-                              max_levels: int = 8,
+                              max_levels: int | None = None,
                               *, include_child_ranges: bool = False):
     """Landmark engine forests on device: per rank, one tree per owned
     cell (ascending cell id), nodes stamped with their cell — the same
@@ -366,6 +397,8 @@ def build_cell_forests_device(points, cell, f, nranks: int,
     """
     met = _as_device_metric(metric)
     pts = np.asarray(points)
+    if max_levels is None:
+        max_levels = estimate_max_levels(pts, met)
     cell = np.asarray(cell)
     f = np.asarray(f)
     members_r, cells_r, tslot_r = [], [], []

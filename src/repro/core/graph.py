@@ -43,6 +43,11 @@ class RunStats:
     build_s: float = 0.0           # forest-construction wall clock (tree
                                    # traversal only; 0.0 on tile paths —
                                    # reported SEPARATELY from elapsed_s)
+    kernel_s_est: float = 0.0      # est. wall clock inside distance kernels
+                                   # (dists_evaluated / microbenched pair
+                                   # throughput; 0.0 when not estimated)
+    comm_s_est: float = 0.0        # elapsed_s - kernel_s_est when estimated:
+                                   # collectives + dispatch + epilogues
 
     @property
     def total_comm_bytes(self) -> float:

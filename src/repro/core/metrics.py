@@ -71,6 +71,10 @@ class Metric:
     # group-aware variant (landmark W/G phases)
     grouped_pallas: Callable | None = None
     grouped_ref: Callable | None = None
+    # ghost-ring variant (landmark ghost_mode="ring": visiting block rows
+    # carry packed Lemma-1 cell masks instead of materialized ghost copies)
+    ghost_pallas: Callable | None = None
+    ghost_ref: Callable | None = None
     # level-synchronous tree-frontier kernel (traversal="tree")
     frontier_pallas: Callable | None = None
     frontier_ref: Callable | None = None
@@ -255,6 +259,8 @@ def _register_builtins() -> None:
         tile_ref=nt.nng_tile_ref,
         grouped_pallas=nt.nng_tile_grouped_pallas,
         grouped_ref=nt.nng_tile_grouped_ref,
+        ghost_pallas=nt.nng_tile_ghost_pallas,
+        ghost_ref=nt.nng_tile_ghost_ref,
         frontier_pallas=tf.tree_frontier_pallas,
         frontier_ref=tf.tree_frontier_ref,
         block_summary=_euclidean_block_summary,
@@ -274,6 +280,8 @@ def _register_builtins() -> None:
         tile_ref=nt.nng_tile_hamming_ref,
         grouped_pallas=nt.nng_tile_grouped_hamming_pallas,
         grouped_ref=nt.nng_tile_grouped_hamming_ref,
+        ghost_pallas=nt.nng_tile_ghost_hamming_pallas,
+        ghost_ref=nt.nng_tile_ghost_hamming_ref,
         frontier_pallas=tf.tree_frontier_hamming_pallas,
         frontier_ref=tf.tree_frontier_hamming_ref,
     ))
@@ -291,6 +299,8 @@ def _register_builtins() -> None:
         tile_ref=nt.nng_tile_l1_ref,
         grouped_pallas=nt.nng_tile_grouped_l1_pallas,
         grouped_ref=nt.nng_tile_grouped_l1_ref,
+        ghost_pallas=nt.nng_tile_ghost_l1_pallas,
+        ghost_ref=nt.nng_tile_ghost_l1_ref,
         frontier_pallas=tf.tree_frontier_l1_pallas,
         frontier_ref=tf.tree_frontier_l1_ref,
     ))

@@ -1,7 +1,9 @@
 from .ops import (  # noqa: F401
     eps_count,
+    ghost_block_active,
     grouped_block_active,
     nng_tile_bits,
+    nng_tile_bits_ghost,
     nng_tile_bits_grouped,
     nng_tile_bits_pair,
     nng_tile_geometry,

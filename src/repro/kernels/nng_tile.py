@@ -551,3 +551,267 @@ def nng_tile_grouped_l1_ref(
     hit = _grouped_hit(d <= jnp.float32(eps), x_group, y_group,
                        x_group >= 0, y_group >= 0, x_ids, y_ids)
     return jnp.sum(hit.astype(jnp.int32), axis=1), _pack_words(hit)
+
+
+# ---------------------------------------------------------------------------
+# Ghost-ring variants (landmark engine, ghost_mode="ring"): the slacked
+# Lemma-1 ghost candidacy test travels WITH the visiting point block as a
+# per-row packed cell bitmask (x_gbits, ceil(m/32) uint32 words per row)
+# instead of materializing per-(point, cell) ghost copies in an all_to_all
+# buffer. hit(i, j) = d_ok(i, j) and y_group[j] >= 0 and bit y_group[j]
+# of x_gbits[i] is set. Same-cell pairs are excluded upstream — a row's
+# OWN cell bit is never set when the mask is packed — so unlike the
+# grouped kernels no id-inequality test is needed (a self pair is always
+# same-cell). Padding x rows carry all-zero masks, padding y rows carry
+# group -1; both are structurally dead.
+# ---------------------------------------------------------------------------
+
+def _ghost_unpack(gb):
+    """(TQ, MW) packed uint32 cell masks -> (TQ, MW*32) bool bits
+    (little-endian bit order, the ``_pack_words`` layout)."""
+    tq, mw = gb.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (gb[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    return bits.reshape(tq, mw * 32) != 0
+
+
+def _ghost_active(xb, yg):
+    """Block-activity flag for a ghost tile: live iff some visiting row
+    has a ghost bit inside the y tile's valid-cell [min, max] range (the
+    caller cell-sorts y, so the range is tight). Also covers all-padding
+    tiles on either side (empty range / all-zero masks)."""
+    yv = yg >= 0
+    ymin = jnp.min(jnp.where(yv, yg, _GBIG))
+    ymax = jnp.max(jnp.where(yv, yg, -1))
+    cells = jnp.arange(xb.shape[1], dtype=jnp.int32)
+    hot = jnp.any(xb, axis=0) & (cells >= ymin) & (cells <= ymax)
+    return yv, jnp.any(hot)
+
+
+def _ghost_hit(d_ok, xb, yg, yv):
+    """Fold the per-pair ghost-bit lookup into the hit mask via one MXU
+    contraction: unpacked masks (TQ, M) x one-hot y cells (M, TP). The
+    products are exact 0/1 fp32 sums, so the > 0.5 test is exact."""
+    cells = jnp.arange(xb.shape[1], dtype=jnp.int32)
+    oneh = (yg[None, :] == cells[:, None]) & yv[None, :]
+    sel = jax.lax.dot_general(
+        xb.astype(jnp.float32), oneh.astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    return d_ok & (sel > 0.5)
+
+
+def _nng_tile_ghost_kernel(
+    x_ref, y_ref, gb_ref, yg_ref, cnt_ref, bits_ref, *, eps2
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    xb = _ghost_unpack(gb_ref[...])
+    yg = yg_ref[...]
+    yv, active = _ghost_active(xb, yg)
+
+    @pl.when(active)
+    def _compute():
+        d2 = _l2_tile_d2(x_ref[...], y_ref[...])            # (TQ, TP)
+        hit = _ghost_hit(d2 <= eps2, xb, yg, yv)
+        cnt_ref[...] += jnp.sum(hit.astype(jnp.int32), axis=1)
+        bits_ref[...] = _pack_words(hit)
+
+    @pl.when(~active)
+    def _skip():
+        bits_ref[...] = jnp.zeros_like(bits_ref)
+
+
+def nng_tile_ghost_pallas(
+    x, y, x_gbits, y_group, eps: float, *, tq: int = 256, tp: int = 512,
+    interpret: bool = False,
+):
+    """Ghost-ring L2 tile: x (q, d) visiting rows, y (p, d) local rows,
+    x_gbits (q, mw) packed ghost-cell masks, y_group (p,) int32 cell ids
+    (< 0 = padding) -> (cnt (q,), bits (q, p/32)).
+
+    hit(i, j) = d2 <= eps² and y_group[j] >= 0 and x_gbits[i] has bit
+    y_group[j]. Same tiling contract as ``nng_tile_grouped_pallas``;
+    blocks with no (ghost bit, y cell) overlap early-out without touching
+    the MXU (callers cell-sort y so the range test is tight)."""
+    q, d = x.shape
+    p, _ = y.shape
+    assert q % tq == 0 and p % tp == 0 and tp % 32 == 0
+    assert x_gbits.shape[0] == q
+    mw = x_gbits.shape[1]
+    grid = (q // tq, p // tp)
+    kernel = functools.partial(_nng_tile_ghost_kernel, eps2=_eps2_f32(eps))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tp, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tq, mw), lambda i, j: (i, 0)),
+            pl.BlockSpec((tp,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+            pl.BlockSpec((tq, tp // 32), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+            jax.ShapeDtypeStruct((q, p // 32), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(x, y, x_gbits, y_group)
+
+
+def nng_tile_ghost_ref(x, y, x_gbits, y_group, eps: float):
+    """Pure-jnp oracle for the ghost L2 tile (same BLAS3 fp32 expansion
+    and the same exact bit-lookup contraction as the kernel)."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    d2 = (jnp.sum(x * x, 1)[:, None] + jnp.sum(y * y, 1)[None, :]
+          - 2.0 * x @ y.T)
+    hit = _ghost_hit(d2 <= jnp.float32(eps) ** 2, _ghost_unpack(x_gbits),
+                     y_group, y_group >= 0)
+    return jnp.sum(hit.astype(jnp.int32), axis=1), _pack_words(hit)
+
+
+def _nng_tile_ghost_hamming_kernel(
+    x_ref, y_ref, gb_ref, yg_ref, cnt_ref, bits_ref, *, eps: int, wchunk: int
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    xb = _ghost_unpack(gb_ref[...])
+    yg = yg_ref[...]
+    yv, active = _ghost_active(xb, yg)
+
+    @pl.when(active)
+    def _compute():
+        d = _hamming_tile_d(x_ref[...], y_ref[...], wchunk)  # (TQ, TP)
+        hit = _ghost_hit(d <= eps, xb, yg, yv)
+        cnt_ref[...] += jnp.sum(hit.astype(jnp.int32), axis=1)
+        bits_ref[...] = _pack_words(hit)
+
+    @pl.when(~active)
+    def _skip():
+        bits_ref[...] = jnp.zeros_like(bits_ref)
+
+
+def nng_tile_ghost_hamming_pallas(
+    x, y, x_gbits, y_group, eps: float, *, tq: int = 128, tp: int = 256,
+    wchunk: int = 8, interpret: bool = False,
+):
+    """Ghost-ring Hamming tile over packed uint32 rows; same contract as
+    ``nng_tile_ghost_pallas`` with exact integer threshold."""
+    q, w = x.shape
+    p, _ = y.shape
+    assert q % tq == 0 and p % tp == 0 and tp % 32 == 0 and w % wchunk == 0
+    assert x_gbits.shape[0] == q
+    mw = x_gbits.shape[1]
+    grid = (q // tq, p // tp)
+    kernel = functools.partial(
+        _nng_tile_ghost_hamming_kernel, eps=int(eps), wchunk=wchunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((tp, w), lambda i, j: (j, 0)),
+            pl.BlockSpec((tq, mw), lambda i, j: (i, 0)),
+            pl.BlockSpec((tp,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+            pl.BlockSpec((tq, tp // 32), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+            jax.ShapeDtypeStruct((q, p // 32), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(x, y, x_gbits, y_group)
+
+
+def nng_tile_ghost_hamming_ref(x, y, x_gbits, y_group, eps: float):
+    """Pure-jnp oracle for the ghost Hamming tile."""
+    xor = jnp.bitwise_xor(x[:, None, :], y[None, :, :])
+    d = jnp.sum(jax.lax.population_count(xor).astype(jnp.int32), axis=-1)
+    hit = _ghost_hit(d <= jnp.int32(int(eps)), _ghost_unpack(x_gbits),
+                     y_group, y_group >= 0)
+    return jnp.sum(hit.astype(jnp.int32), axis=1), _pack_words(hit)
+
+
+def _nng_tile_ghost_l1_kernel(
+    x_ref, y_ref, gb_ref, yg_ref, cnt_ref, bits_ref, *, eps: float,
+    cchunk: int
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    xb = _ghost_unpack(gb_ref[...])
+    yg = yg_ref[...]
+    yv, active = _ghost_active(xb, yg)
+
+    @pl.when(active)
+    def _compute():
+        d = _l1_tile_d(x_ref[...], y_ref[...], cchunk)       # (TQ, TP)
+        hit = _ghost_hit(d <= jnp.float32(eps), xb, yg, yv)
+        cnt_ref[...] += jnp.sum(hit.astype(jnp.int32), axis=1)
+        bits_ref[...] = _pack_words(hit)
+
+    @pl.when(~active)
+    def _skip():
+        bits_ref[...] = jnp.zeros_like(bits_ref)
+
+
+def nng_tile_ghost_l1_pallas(
+    x, y, x_gbits, y_group, eps: float, *, tq: int = 128, tp: int = 256,
+    cchunk: int = 8, interpret: bool = False,
+):
+    """Ghost-ring L1 tile over fp32 rows; same contract as
+    ``nng_tile_ghost_pallas`` with the true-distance threshold."""
+    q, d = x.shape
+    p, _ = y.shape
+    assert q % tq == 0 and p % tp == 0 and tp % 32 == 0 and d % cchunk == 0
+    assert x_gbits.shape[0] == q
+    mw = x_gbits.shape[1]
+    grid = (q // tq, p // tp)
+    kernel = functools.partial(
+        _nng_tile_ghost_l1_kernel, eps=float(eps), cchunk=cchunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tp, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tq, mw), lambda i, j: (i, 0)),
+            pl.BlockSpec((tp,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
+            pl.BlockSpec((tq, tp // 32), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+            jax.ShapeDtypeStruct((q, p // 32), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(x, y, x_gbits, y_group)
+
+
+def nng_tile_ghost_l1_ref(x, y, x_gbits, y_group, eps: float,
+                          cchunk: int = 8):
+    """Pure-jnp oracle for the ghost L1 tile (same chunked summation)."""
+    d = _l1_tile_d(jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32),
+                   cchunk)
+    hit = _ghost_hit(d <= jnp.float32(eps), _ghost_unpack(x_gbits),
+                     y_group, y_group >= 0)
+    return jnp.sum(hit.astype(jnp.int32), axis=1), _pack_words(hit)

@@ -23,7 +23,8 @@ from . import bits_epilogue as _be
 from . import ref
 from .bits_epilogue import NOCOL, SENTINEL
 from .eps_count import eps_count_pallas
-from .nng_tile import _GBIG, _grouped_hit, _pack_words
+from .nng_tile import (_GBIG, _ghost_hit, _ghost_unpack, _grouped_hit,
+                       _pack_words)
 from .pairwise_hamming import pairwise_hamming_pallas
 from .pairwise_l2 import pairwise_sqdist_pallas
 from .tree_frontier import _frontier_masks_float, _unpack_words
@@ -285,6 +286,86 @@ def nng_tile_bits_grouped(
         cnt, bits = _grouped_padded_call(
             xp, yp, xgp, ygp, xidp, yidp, fn=met.grouped_pallas,
             eps=float(eps), tq=tq, tp=tp, interpret=mode == "interpret")
+    return cnt[:q], bits[:q, :nw], scheduled, skipped
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fn", "eps", "tq", "tp", "interpret"))
+def _ghost_padded_call(x, y, gb, yg, *, fn, eps, tq, tp, interpret):
+    return fn(x, y, gb, yg, eps, tq=tq, tp=tp, interpret=interpret)
+
+
+def ghost_block_active(x_gbits, y_group, tq: int, tp: int):
+    """Host-side mirror of the ghost kernel's block-skip rule.
+
+    A (tq × tp) block is live iff some visiting row's packed ghost-cell
+    mask has a bit inside the y tile's valid-cell [min, max] range —
+    exactly the decision ``_ghost_active`` makes inside the Pallas kernel,
+    so the (nqb, npb) bool map it returns is the ground truth for the
+    tiles_scheduled / tiles_skipped counters on the ghost-ring path."""
+    q = x_gbits.shape[0]
+    p = y_group.shape[0]
+    assert q % tq == 0 and p % tp == 0, (q, tq, p, tp)
+    xb = _ghost_unpack(x_gbits)                       # (q, m_pad) bool
+    m_pad = xb.shape[1]
+    xany = jnp.any(xb.reshape(q // tq, tq, m_pad), axis=1)   # (nqb, m_pad)
+    yg = y_group.reshape(p // tp, tp)
+    ymin = jnp.min(jnp.where(yg >= 0, yg, _GBIG), axis=1)
+    ymax = jnp.max(jnp.where(yg >= 0, yg, -1), axis=1)
+    cells = jnp.arange(m_pad, dtype=jnp.int32)
+    inrange = ((cells[None, :] >= ymin[:, None])
+               & (cells[None, :] <= ymax[:, None]))   # (npb, m_pad)
+    return jnp.any(xany[:, None, :] & inrange[None, :, :], axis=-1)
+
+
+def nng_tile_bits_ghost(
+    x, y, x_gbits, y_group, eps: float, metric="euclidean",
+):
+    """Ghost-ring fused ε-NNG tile for the landmark engine.
+
+    hit(i, j) = d(x_i, y_j) <= eps  and  y_group[j] >= 0  and bit
+    y_group[j] of x_gbits[i] is set — the slacked Lemma-1 ghost test
+    evaluated from the visiting block's packed per-row cell masks instead
+    of materialized ghost copies. A row's own cell bit is never set (the
+    mask packer clears it), so same-cell pairs — including self pairs —
+    are structurally excluded without an id test.
+
+    Returns (cnt (q,), bits (q, ceil(p/32)) uint32, tiles_scheduled,
+    tiles_skipped) with the same conventions as ``nng_tile_bits_grouped``;
+    callers cell-sort y so the kernel's ghost-bit/cell-range block skip
+    fires. Pads internally (x pad rows get all-zero masks, y pad rows get
+    group -1).
+
+    ``metric`` is a registry name or ``Metric``; metrics without a ghost
+    kernel run the generic pure-jnp fallback over ``metric.cdist``."""
+    met = _resolve_metric(metric)
+    mode = _mode()
+    q = x.shape[0]
+    p = y.shape[0]
+    nw = -(-p // 32)
+    tq, tp = met.tile_shape(q, p)
+    xp, _ = _pad_rows(jnp.asarray(x, met.dtype), tq)
+    yp, _ = _pad_rows(jnp.asarray(y, met.dtype), tp)
+    gbp, _ = _pad_rows(jnp.asarray(x_gbits, jnp.uint32), tq)
+    ygp, _ = _pad_rows(jnp.asarray(y_group, jnp.int32), tp, value=-1)
+    active = ghost_block_active(gbp, ygp, tq, tp)
+    scheduled = jnp.int32(active.size)
+    skipped = scheduled - jnp.sum(active.astype(jnp.int32))
+    if met.ghost_pallas is None or mode == "jnp":
+        if met.ghost_ref is not None:
+            cnt, bits = met.ghost_ref(xp, yp, gbp, ygp, eps)
+        else:
+            hit = _ghost_hit(
+                met.cdist(xp, yp) <= met.comparable(eps),
+                _ghost_unpack(gbp), ygp, ygp >= 0)
+            cnt = jnp.sum(hit.astype(jnp.int32), axis=1)
+            bits = _pack_words(hit)
+    else:
+        xp = _pad_cols(xp, met.col_mult)
+        yp = _pad_cols(yp, met.col_mult)
+        cnt, bits = _ghost_padded_call(
+            xp, yp, gbp, ygp, fn=met.ghost_pallas, eps=float(eps),
+            tq=tq, tp=tp, interpret=mode == "interpret")
     return cnt[:q], bits[:q, :nw], scheduled, skipped
 
 

@@ -53,7 +53,8 @@ def grow_plan(plan):
 
 
 def run_landmark(pts, eps, centers, f, mesh, plan, *, metric="euclidean",
-                 max_grows=6, traversal="tiles", cell=None, forest=None):
+                 max_grows=6, traversal="tiles", cell=None, forest=None,
+                 ghost_mode="coll"):
     """Landmark engine via the unified driver. Returns (outputs, plan)
     with the overflow flag (outputs[6]) guaranteed False; outputs[7..10]
     are the per-rank tiles_skipped / tiles_scheduled / dists_evaluated /
@@ -66,7 +67,7 @@ def run_landmark(pts, eps, centers, f, mesh, plan, *, metric="euclidean",
         assert cell is not None, "traversal='tree' needs the cell assignment"
     engine = SpatialPartitionEngine(
         pts, eps, mesh, metric, traversal=traversal, centers=centers, f=f,
-        cell=cell, plan=plan, forest=forest)
+        cell=cell, plan=plan, forest=forest, ghost_mode=ghost_mode)
     out, plan, _, _ = drive(engine, max_grows=max_grows,
                             steady_state=False)
     return out, plan
@@ -105,6 +106,11 @@ def main(argv=None):
     ap.add_argument("--planner", default="device", choices=["device", "host"],
                     help="landmark capacity planning: one shard_map "
                          "counting pass (exact) or the host numpy pass")
+    ap.add_argument("--ghost-mode", default="coll",
+                    choices=["coll", "ring", "auto"],
+                    help="landmark ε-ghost schedule: capacity-padded "
+                         "all_to_all (coll), ghost-free block rotation "
+                         "(ring), or the byte-model pick (auto)")
     args = ap.parse_args(argv)
 
     from repro.data import synthetic_pointset
@@ -121,7 +127,11 @@ def main(argv=None):
     g = build_nng(
         pts, args.eps, metric=args.metric, partition=partition,
         traversal=args.traversal, planner=args.planner, mesh=mesh,
-        k_cap=args.k_cap, prune=not args.no_prune, seed=args.seed)
+        k_cap=args.k_cap, prune=not args.no_prune, seed=args.seed,
+        ghost_mode=args.ghost_mode)
+    if partition == "spatial":
+        print(f"ghost_mode={g.meta['ghost_mode']}"
+              + (" (auto)" if args.ghost_mode == "auto" else ""))
     st = g.stats
     print(f"tiles skipped={st.tiles_skipped:.0f}/{st.tiles_scheduled:.0f} "
           f"dists_evaluated={st.dists_evaluated:.0f} "

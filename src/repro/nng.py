@@ -35,9 +35,11 @@ import time
 import jax
 import numpy as np
 
-from repro.core.distributed import (LandmarkPlan, landmark_run,
+from repro.core.distributed import (LandmarkPlan, ghost_coll_bytes,
+                                    ghost_ring_bytes, landmark_run,
                                     make_nng_mesh, plan_landmark_device,
-                                    plan_ring_schedule, systolic_run)
+                                    plan_ring_schedule, resolve_ghost_mode,
+                                    systolic_run)
 from repro.core.graph import NNGraph, RunStats
 from repro.core.landmark import ghost_membership, lpt_assignment, select_centers
 from repro.core.metrics import Metric, get_metric, register_metric  # noqa: F401 (re-export)
@@ -253,6 +255,7 @@ def grow_plan(plan: LandmarkPlan) -> LandmarkPlan:
         cap_ghost=2 * plan.cap_ghost,
         g_per_pt=min(2 * plan.g_per_pt, plan.m_centers),
         k_cap=2 * plan.k_cap,
+        cap_rank=max(2 * plan.cap_rank, 32) if plan.cap_rank else 0,
     )
 
 
@@ -264,7 +267,10 @@ class SpatialPartitionEngine(Engine):
                  traversal: str = "tiles", centers=None, f=None, cell=None,
                  plan: LandmarkPlan | None = None, forest: dict | None = None,
                  seed: int = 0, axis: str = "ring",
-                 forest_backend: str = "device"):
+                 forest_backend: str = "device", ghost_mode: str = "coll"):
+        if ghost_mode not in ("coll", "ring", "auto"):
+            raise ValueError(f"unknown ghost_mode {ghost_mode!r} "
+                             "(want 'coll', 'ring' or 'auto')")
         self.metric = get_metric(metric)
         self.points = np.asarray(points)
         self.eps = float(eps)
@@ -274,6 +280,7 @@ class SpatialPartitionEngine(Engine):
         self.traversal = traversal
         self.axis = axis
         self.plan = plan
+        self.ghost_mode = ghost_mode
         n = len(self.points)
         nranks = mesh.size
         met = self.metric.host
@@ -341,7 +348,8 @@ class SpatialPartitionEngine(Engine):
         return LandmarkPlan(
             m_centers=m, cap_coal=int(coal.max()) + 8,
             cap_ghost=int(gcnt.max()) + 8, g_per_pt=max(g_per_pt, 1),
-            k_cap=self.k_cap)
+            k_cap=self.k_cap,
+            cap_rank=int(coal.sum(axis=0).max()) + 8)
 
     def initial_plan(self) -> LandmarkPlan:
         if self.plan is not None:
@@ -358,12 +366,22 @@ class SpatialPartitionEngine(Engine):
         raise ValueError(f"unknown planner {self.planner!r}")
 
     # -- engine steps -------------------------------------------------------
+    def resolved_ghost_mode(self, plan: LandmarkPlan) -> str:
+        """The mode this plan actually runs: ``"auto"`` resolves per-plan
+        from the exact byte models (``resolve_ghost_mode``), so a grown
+        plan may legitimately flip the choice — each plan is a different
+        compiled program anyway."""
+        return resolve_ghost_mode(
+            self.ghost_mode, plan, self.points.shape[1],
+            self.points.dtype.itemsize, self.mesh.size)
+
     def run(self, plan):
         return landmark_run(
             self.points, self.eps, self.centers, self.f, self.mesh, plan,
             metric=self.metric, traversal=self.traversal,
             forest=self.forest, cell=self.cell, axis=self.axis,
-            forest_backend=self.forest_backend)
+            forest_backend=self.forest_backend,
+            ghost_mode=self.resolved_ghost_mode(plan))
 
     def overflowed(self, out):
         return bool(np.asarray(out[6]).any())
@@ -376,16 +394,26 @@ class SpatialPartitionEngine(Engine):
                 (np.asarray(out[3]), np.asarray(out[4]))]
 
     def _landmark_comm_bytes(self, plan: LandmarkPlan) -> dict:
-        """Per-channel all_to_all bytes: the coalesce and ghost exchanges
-        each move three (nranks, cap, …) operands per rank — point rows,
-        global ids, and cell assignments (pts + id + cell per row)."""
+        """Per-channel exchange bytes. ``coalesce`` moves three
+        (nranks, cap, …) all_to_all operands per rank — point rows, global
+        ids, cell assignments. The ghost channel depends on the resolved
+        mode: ``ghost`` (capacity-padded all_to_all of ghost copies) or
+        ``ghost_ring`` (nranks // 2 ppermute hops of the compacted block +
+        ids + packed Lemma-1 bits) — both from the canonical formulas in
+        ``device.py`` that ``resolve_ghost_mode`` compares."""
         nranks = self.mesh.size
         dim = self.points.shape[1]
-        row_bytes = self.points.dtype.itemsize * dim + 4 + 4  # pts + id + cell
+        item = self.points.dtype.itemsize
+        row_bytes = item * dim + 4 + 4   # pts + id + cell
         lw = nranks * plan.cap_coal
-        lg = nranks * plan.cap_ghost
-        return {"coalesce": float(nranks * lw * row_bytes),
-                "ghost": float(nranks * lg * row_bytes)}
+        out = {"coalesce": float(nranks * lw * row_bytes)}
+        if self.resolved_ghost_mode(plan) == "ring":
+            out["ghost_ring"] = float(ghost_ring_bytes(
+                nranks, plan.cap_rank, dim, item, plan.m_centers))
+        else:
+            out["ghost"] = float(ghost_coll_bytes(
+                nranks, plan.cap_ghost, dim, item))
+        return out
 
     def run_stats(self, out, plan: LandmarkPlan) -> RunStats:
         return RunStats(
@@ -417,6 +445,7 @@ def build_nng(
     max_grows: int = 8,
     overlap: bool = True,
     forest_backend: str = "device",
+    ghost_mode: str = "coll",
 ) -> NNGraph:
     """Build the exact ε-neighbor graph of ``points`` under ``metric``,
     distributed over ``mesh``. Returns a CSR ``NNGraph``.
@@ -431,7 +460,11 @@ def build_nng(
     picks who runs the cover-forest construction for ``traversal="tree"``:
     the jit device builder (``flat_tree_device``, the end-to-end
     device-resident path) or the float64 host oracle; the forest phase is
-    timed separately in ``RunStats.build_s``.
+    timed separately in ``RunStats.build_s``. ``ghost_mode`` (spatial
+    partition only) selects the ε-ghost schedule: ``"coll"`` (capacity-
+    padded all_to_all, the default), ``"ring"`` (ghost-free block
+    rotation), or ``"auto"`` (per-plan pick from the exact byte models —
+    the resolved choice lands in ``meta["ghost_mode"]``).
     """
     met = get_metric(metric)
     if mesh is None:
@@ -459,7 +492,7 @@ def build_nng(
         engine = SpatialPartitionEngine(
             run_points, eps, mesh, met, k_cap=k_cap or 128, planner=planner,
             m_centers=m_centers, traversal=traversal, seed=seed,
-            forest_backend=forest_backend)
+            forest_backend=forest_backend, ghost_mode=ghost_mode)
     else:
         raise ValueError(
             f"unknown partition {partition!r} (want 'point' or 'spatial')")
@@ -483,5 +516,7 @@ def build_nng(
     if partition == "spatial":
         meta["planner"] = planner
         meta["m_centers"] = engine.m_centers
+        # the RESOLVED mode, never "auto" — what the final plan compiled
+        meta["ghost_mode"] = engine.resolved_ghost_mode(plan)
     return NNGraph.from_neighbor_tables(
         n, engine.neighbor_tables(out), stats=stats, meta=meta)

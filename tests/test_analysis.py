@@ -164,7 +164,7 @@ def test_default_contracts_all_clean():
     """Every registered Pallas kernel satisfies its contract — including
     eps_count, whose float(eps)**2 literal this PR fixed."""
     diags, contracts = check_all()
-    assert len(contracts) == 14
+    assert len(contracts) == 17
     assert diags == [], [d.render() for d in diags]
 
 
@@ -280,13 +280,19 @@ from repro.analysis.traffic import (audit_all, collect_collectives,
 
 diags, table, jaxprs = audit_all(nranks=8)
 assert diags == [], [d.render() for d in diags]
-assert len(table) == 7, sorted(table)
+assert len(table) == 9, sorted(table)
 for subject, row in table.items():
     assert row["derived"] == row["formula"], (subject, row)
 # systolic configs must account all four ring channels on the tree path
 tree = table["systolic[traversal=tree,overlap=True,prune=True]"]["derived"]
 assert set(tree) == {"ring_points", "ring_mirror", "ring_forest",
                      "ring_summary"}
+# landmark ghost modes: the ring path must account its rotation under the
+# ghost_ring channel and carry NO all-to-all ghost channel (and vice versa)
+ring = table["landmark[traversal=tiles,ghost=ring]"]["derived"]
+assert "ghost_ring" in ring and "ghost" not in ring, sorted(ring)
+coll = table["landmark[traversal=tiles,ghost=coll]"]["derived"]
+assert "ghost" in coll and "ghost_ring" not in coll, sorted(coll)
 
 # negative fixture: a shard_map program with a rogue ppermute that maps to
 # no accounted channel must raise RA201
@@ -337,5 +343,5 @@ def test_cli_check_passes(tmp_path):
     import json
     report = json.loads(out_json.read_text())
     assert report["ok"] is True
-    assert len(report["contracts"]["checked"]) == 14
+    assert len(report["contracts"]["checked"]) == 17
     assert report["kernel_costs"], "per-kernel HLO cost rows missing"

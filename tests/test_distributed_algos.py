@@ -603,6 +603,157 @@ def test_device_parity_and_ring_bytes_meshes(devices):
     assert "MESH_PARITY_OK" in out
 
 
+# ---------------------------------------------------------------------------
+# landmark ghost ring: block rotation vs capacity-padded all_to_all
+# ---------------------------------------------------------------------------
+
+_GHOST_RING_CODE = r"""
+import numpy as np, jax
+from repro.core.brute import brute_force_graph
+from repro.core.distributed import ghost_ring_bytes, resolve_ghost_mode
+from repro.core.metrics import get_metric
+from repro.data import synthetic_pointset
+from repro.nng import build_nng
+
+nranks = len(jax.devices())
+n = 600                       # divisible by 3, 5, 8 — no duplicate padding
+
+def gap_safe_eps(pts, target=1.0):
+    d2 = ((pts[:, None, :].astype(np.float64)
+           - pts[None, :, :].astype(np.float64)) ** 2).sum(-1)
+    vals = np.sort(np.sqrt(d2[np.triu_indices(n, 1)]))
+    i = int(np.searchsorted(vals, target))
+    lo, hi = max(i - 2000, 0), min(i + 2000, len(vals) - 1)
+    j = lo + int(np.argmax(vals[lo + 1:hi + 1] - vals[lo:hi]))
+    assert vals[j + 1] - vals[j] > 1e-5, "no safe gap near target"
+    return float(0.5 * (vals[j] + vals[j + 1]))
+
+epts = synthetic_pointset(n, 6, "euclidean", seed=17)
+workloads = [("euclidean", epts, gap_safe_eps(epts)),
+             ("hamming", synthetic_pointset(n, 8, "hamming", seed=11), 40)]
+
+for metric, pts, eps in workloads:
+    gb = brute_force_graph(pts, eps, metric)   # float64 / exact oracle
+    met = get_metric(metric)
+    run_pts = np.asarray(pts, met.host.dtype)
+    dim, item = run_pts.shape[1], run_pts.dtype.itemsize
+    for traversal in ("tiles", "tree"):
+        for gm in ("coll", "ring", "auto"):
+            g = build_nng(pts, eps, metric=metric, partition="spatial",
+                          traversal=traversal, ghost_mode=gm, k_cap=256,
+                          seed=1)
+            assert g == gb, (metric, traversal, gm, nranks)
+            plan, st = g.meta["plan"], g.stats
+            resolved = g.meta["ghost_mode"]
+            if gm == "auto":
+                # the recorded mode is what the byte models pick, never
+                # the literal "auto"
+                assert resolved == resolve_ghost_mode(
+                    "auto", plan, dim, item, nranks), (metric, traversal)
+            else:
+                assert resolved == gm, (metric, traversal, gm)
+            if resolved == "ring":
+                # the ring channel replaces the padded ghost all_to_all,
+                # and its counter IS the analytic formula
+                assert "ghost" not in st.comm_bytes
+                assert st.comm_bytes["ghost_ring"] == ghost_ring_bytes(
+                    nranks, plan.cap_rank, dim, item, plan.m_centers), \
+                    (metric, traversal, gm, nranks)
+            else:
+                assert "ghost_ring" not in st.comm_bytes
+                assert st.comm_bytes["ghost"] > 0
+print("GHOST_RING_PARITY_OK")
+"""
+
+
+@pytest.mark.parametrize("devices", [3, 5, 8])
+def test_ghost_ring_parity_meshes(devices):
+    """Landmark ghost ring vs the collective ghost exchange vs the float64
+    brute oracle at odd, non-power-of-two, and even mesh sizes (the even
+    case exercises the half-ring boundary round), both metrics, both
+    traversal flavors, plus the ``ghost_ring`` byte counter against the
+    analytic formula and the "auto" mode resolution."""
+    out = run_subprocess(_GHOST_RING_CODE, devices=devices, timeout=1800)
+    assert "GHOST_RING_PARITY_OK" in out
+
+
+def test_resolve_ghost_mode_auto():
+    """Unit: the auto picker follows the exact byte models, falls back to
+    the collective path on unplanned (cap_rank=0) plans, and explicit
+    modes pass through untouched."""
+    from repro.core.distributed import (LandmarkPlan, ghost_coll_bytes,
+                                        ghost_ring_bytes, resolve_ghost_mode)
+    # fat ghost capacity, short ring block -> ring moves fewer bytes
+    p_ring = LandmarkPlan(m_centers=32, cap_coal=64, cap_ghost=4096,
+                          g_per_pt=8, k_cap=64, cap_rank=64)
+    assert ghost_ring_bytes(8, 64, 16, 4, 32) \
+        < ghost_coll_bytes(8, 4096, 16, 4)
+    assert resolve_ghost_mode("auto", p_ring, 16, 4, 8) == "ring"
+    # tiny ghost capacity, tall ring block -> the padded all_to_all wins
+    p_coll = LandmarkPlan(m_centers=32, cap_coal=2048, cap_ghost=16,
+                          g_per_pt=1, k_cap=64, cap_rank=2048)
+    assert ghost_coll_bytes(8, 16, 16, 4) \
+        < ghost_ring_bytes(8, 2048, 16, 4, 32)
+    assert resolve_ghost_mode("auto", p_coll, 16, 4, 8) == "coll"
+    # hand-built plans (cap_rank left at the 0 default) can never run ring
+    p0 = LandmarkPlan(m_centers=32, cap_coal=64, cap_ghost=4096,
+                      g_per_pt=8, k_cap=64)
+    assert resolve_ghost_mode("auto", p0, 16, 4, 8) == "coll"
+    assert resolve_ghost_mode("ring", p0, 16, 4, 8) == "ring"
+    assert resolve_ghost_mode("coll", p_ring, 16, 4, 8) == "coll"
+
+
+# ---------------------------------------------------------------------------
+# split-ring schedule + tree pruning regression (dense overlapping blocks)
+# ---------------------------------------------------------------------------
+
+_TREE_PRUNE_CODE = r"""
+import numpy as np, jax
+from repro.core.brute import brute_force_graph
+from repro.core.distributed import plan_ring_schedule
+from repro.data import synthetic_pointset
+from repro.nng import build_nng
+
+nranks = len(jax.devices())
+n = 800
+pts = synthetic_pointset(n, 4, "euclidean", seed=1)
+
+def gap_safe_eps(pts, target=1.0):
+    d2 = ((pts[:, None, :].astype(np.float64)
+           - pts[None, :, :].astype(np.float64)) ** 2).sum(-1)
+    vals = np.sort(np.sqrt(d2[np.triu_indices(n, 1)]))
+    i = int(np.searchsorted(vals, target))
+    lo, hi = max(i - 2000, 0), min(i + 2000, len(vals) - 1)
+    j = lo + int(np.argmax(vals[lo + 1:hi + 1] - vals[lo:hi]))
+    assert vals[j + 1] - vals[j] > 1e-5, "no safe gap near target"
+    return float(0.5 * (vals[j] + vals[j + 1]))
+
+eps = gap_safe_eps(pts)
+# contiguous blocks of uniform data all overlap -> every cross-block round
+# is dense and the planner must rotate forest tables, not raw points
+modes = plan_ring_schedule(pts, nranks, eps)
+assert len(modes) == nranks // 2 and any(m == "forest" for m in modes), modes
+
+g = build_nng(pts, eps, partition="point", traversal="tree", k_cap=256)
+assert g == brute_force_graph(pts, eps), nranks
+assert tuple(g.meta["ring_schedule"]) == modes, g.meta
+# the cover-tree frontier must actually discard subtrees on forest rounds
+# (regression: an all-"points" schedule reports nodes_pruned == 0 and the
+# tree path silently degenerates into the dense bitmask kernel)
+assert g.stats.nodes_pruned > 0, g.stats
+assert g.stats.dists_evaluated > 0
+print("TREE_PRUNE_OK")
+"""
+
+
+def test_tree_forest_rounds_prune_8dev():
+    """Dense overlapping blocks: the split-ring planner emits "forest"
+    rounds and the device cover-tree traversal reports nonzero
+    ``nodes_pruned`` while staying exact vs brute force."""
+    out = run_subprocess(_TREE_PRUNE_CODE, devices=8, timeout=1200)
+    assert "TREE_PRUNE_OK" in out
+
+
 def test_plan_ring_schedule_heuristic():
     """Host split-ring planner: far-apart blocked clusters make every
     cross-block round sparse -> "points" mode; prune=False evaluates every

@@ -318,6 +318,111 @@ def test_nng_tile_grouped_block_skip(metric):
     assert (np.asarray(cnt2) == np.asarray(cnt)[perm]).all()
 
 
+def _pack_cell_masks(gmask):
+    """(q, m) bool per-row cell masks -> (q, ceil(m/32)) packed uint32
+    (little-endian bit order, the ``_pack_words`` layout)."""
+    q, m = gmask.shape
+    words = np.zeros((q, -(-m // 32)), np.uint32)
+    for c in range(m):
+        words[:, c // 32] |= (gmask[:, c].astype(np.uint32)
+                              << np.uint32(c % 32))
+    return words
+
+
+def _ghost_oracle(metric, x, y, gmask, yg, eps):
+    """hit(i, j) = d <= eps and y_group[j] >= 0 and gmask[i, y_group[j]]."""
+    if metric == "euclidean":
+        d = ((x.astype(np.float64)[:, None, :]
+              - y.astype(np.float64)[None, :, :]) ** 2).sum(-1)
+        ok = d <= eps ** 2
+    elif metric == "manhattan":
+        ok = np.abs(x.astype(np.float64)[:, None, :]
+                    - y.astype(np.float64)[None, :, :]).sum(-1) <= eps
+    else:
+        ok = np.bitwise_count(x[:, None, :] ^ y[None, :, :]).sum(-1) <= eps
+    sel = gmask[:, np.clip(yg, 0, gmask.shape[1] - 1)]
+    return ok & (yg >= 0)[None, :] & sel
+
+
+@pytest.mark.parametrize("metric,q,p,d,eps", [
+    ("euclidean", 256, 512, 16, 2.0), ("euclidean", 70, 130, 6, 2.0),
+    ("euclidean", 300, 515, 40, 3.0), ("hamming", 128, 256, 8, 70),
+    ("hamming", 100, 190, 5, 60), ("manhattan", 128, 256, 8, 5.0),
+    ("manhattan", 100, 190, 5, 4.0),
+])
+def test_nng_tile_ghost_fused(metric, q, p, d, eps):
+    """Ghost-ring kernel (interpret) + jnp fallback vs a float64/exact
+    oracle: the per-row packed cell-mask lookup and y validity (< 0) are
+    folded in; non-multiple shapes exercise the internal padding."""
+    from repro.kernels import nng_tile_bits_ghost
+    if metric in ("euclidean", "manhattan"):
+        x = RNG.normal(size=(q, d)).astype(np.float32)
+        y = RNG.normal(size=(p, d)).astype(np.float32)
+    else:
+        x = RNG.integers(0, 2**32, size=(q, d), dtype=np.uint32)
+        y = RNG.integers(0, 2**32, size=(p, d), dtype=np.uint32)
+    m = 50  # cells span two mask words
+    gmask = RNG.random((q, m)) < 0.15
+    gmask[:3] = False              # rows with no ghost targets at all
+    yg = RNG.integers(-1, m, size=p).astype(np.int32)
+    want = _ghost_oracle(metric, x, y, gmask, yg, eps)
+    gbits = _pack_cell_masks(gmask)
+    for mode in ("interpret", "jnp"):
+        os.environ["REPRO_PALLAS"] = mode
+        try:
+            cnt, bits, sched, skip = nng_tile_bits_ghost(
+                x, y, gbits, yg, eps, metric=metric)
+        finally:
+            os.environ["REPRO_PALLAS"] = "interpret"
+        hits = np.unpackbits(np.asarray(bits).view(np.uint8), axis=1,
+                             bitorder="little")[:, :p]
+        assert (hits.astype(bool) == want).all(), mode
+        assert (np.asarray(cnt) == want.sum(1)).all(), mode
+        assert (np.asarray(cnt)
+                == np.bitwise_count(np.asarray(bits)).sum(axis=1)).all()
+        assert int(sched) >= 1 and 0 <= int(skip) <= int(sched)
+
+
+@pytest.mark.parametrize("metric", ["euclidean", "hamming"])
+def test_nng_tile_ghost_block_skip(metric):
+    """Cell-sorted y + banded ghost masks: whole-block skipping must fire,
+    never change the result, and its counters must match the host-side
+    ``ghost_block_active`` mirror."""
+    import jax.numpy as jnp
+    from repro.kernels import nng_tile_bits_ghost
+    from repro.kernels.ops import _pad_rows, ghost_block_active
+    q, p, m = 600, 1200, 64
+    if metric == "euclidean":
+        x = RNG.normal(size=(q, 5)).astype(np.float32)
+        y = RNG.normal(size=(p, 5)).astype(np.float32)
+        eps = 2.0
+        tq, tp = 256, 512
+    else:
+        x = RNG.integers(0, 2**32, size=(q, 5), dtype=np.uint32)
+        y = RNG.integers(0, 2**32, size=(p, 5), dtype=np.uint32)
+        eps = 70
+        tq, tp = 128, 256
+    yg = np.sort(RNG.integers(0, m, size=p)).astype(np.int32)
+    yg[p - 70:] = -1               # trailing padding rows (cell-sorted)
+    # each visiting row only carries bits for a narrow low-cell band, so
+    # high-cell y blocks have no overlap and must be skipped
+    gmask = np.zeros((q, m), bool)
+    gmask[:, :8] = RNG.random((q, 8)) < 0.3
+    gbits = _pack_cell_masks(gmask)
+    want = _ghost_oracle(metric, x, y, gmask, yg, eps)
+    cnt, bits, sched, skip = nng_tile_bits_ghost(
+        x, y, gbits, yg, eps, metric=metric)
+    hits = np.unpackbits(np.asarray(bits).view(np.uint8), axis=1,
+                         bitorder="little")[:, :p]
+    assert (hits.astype(bool) == want).all()
+    assert (np.asarray(cnt) == want.sum(1)).all()
+    assert int(skip) > 0, "banded masks + sorted cells must skip blocks"
+    gbp, _ = _pad_rows(jnp.asarray(gbits, jnp.uint32), tq)
+    ygp, _ = _pad_rows(jnp.asarray(yg, jnp.int32), tp, value=-1)
+    act = np.asarray(ghost_block_active(gbp, ygp, tq, tp))
+    assert (int(sched), int(skip)) == (act.size, act.size - act.sum())
+
+
 def test_bits_to_gathered_ids():
     """Landmark-path extraction: bitmask + arbitrary per-column id table ->
     sorted hit ids, SENTINEL-padded, vs a direct nonzero() reference."""
