@@ -6,7 +6,9 @@ dense-vs-bitmask tile-byte accounting), ``BENCH_systolic.json``
 (edges/s, per-channel ring bytes, double-buffered vs serial ring overlap
 A/B, and the edges/s-vs-nranks strong-scaling curve), and
 ``BENCH_forest_build.json`` (host vs on-device forest-construction wall
-clock; both engine JSONs also carry ``build_s`` + the same A/B entry).
+clock; both engine JSONs also carry ``build_s`` + the same A/B entry), and
+``BENCH_stream.json`` (online maintenance: delta-traversal distance work
+vs a full rebuild, insert throughput, compaction amortization).
 
   python benchmarks/run.py                  # full sweep
   python benchmarks/run.py --only landmark  # just the landmark JSON bench
@@ -37,6 +39,8 @@ def main(argv=None) -> None:
                     help="output path for the systolic perf JSON")
     ap.add_argument("--forest-json", default="BENCH_forest_build.json",
                     help="output path for the forest-build perf JSON")
+    ap.add_argument("--stream-json", default="BENCH_stream.json",
+                    help="output path for the online-maintenance perf JSON")
     args = ap.parse_args(argv)
 
     from benchmarks import tables
@@ -53,6 +57,8 @@ def main(argv=None) -> None:
          lambda: tables.bench_systolic_device(args.systolic_json)),
         ("forest_build_device",                           # on-device builder
          lambda: tables.bench_forest_build(args.forest_json)),
+        ("stream_updates",                                # online maintenance
+         lambda: tables.bench_stream(args.stream_json)),
         ("distance_kernels", tables.bench_distance_kernels),  # kernel layer
     ]
     selected = [(n, f) for n, f in benches

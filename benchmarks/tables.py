@@ -610,6 +610,91 @@ def bench_systolic_device(json_path: str = "BENCH_systolic.json"):
     return res
 
 
+# -- online maintenance: delta updates vs full rebuild ----------------------
+def bench_stream(json_path: str = "BENCH_stream.json"):
+    """Online-maintenance micro-bench (``repro.stream.OnlineNNG``) on the
+    blocked-clusters workload: a single ≤1%-of-corpus insert batch must
+    evaluate ≥10× fewer pair distances through the delta traversal than a
+    full ``build_nng`` rebuild of the same corpus (the asserted headline,
+    ``delta.dist_reduction_x``), plus steady-state insert throughput
+    (``inserts_per_s``), the wall-clock update-vs-rebuild ratio, and the
+    compaction amortization over the streamed batches. Emits
+    ``BENCH_stream.json`` for the CI trend check."""
+    import json
+
+    import jax
+
+    from repro.data import blocked_clusters
+    from repro.kernels.ops import pallas_mode
+    from repro.nng import build_nng
+    from repro.stream import OnlineNNG
+
+    nranks = len(jax.devices())
+    n, dim, b, batches = 4096, 16, 32, 6
+    pool = blocked_clusters(n + b * batches, dim, nranks, seed=4)
+    eps = 1.0
+
+    # the batch-user baseline: what one update costs if you re-run the
+    # full build (steady-state timing — drive() warms then re-times)
+    g_full = build_nng(pool[:n + b], eps, partition="point", k_cap=512)
+    rebuild_s = g_full.stats.elapsed_s
+    rebuild_dists = g_full.stats.dists_evaluated
+
+    o = OnlineNNG(pool[:n], eps, partition="point", k_cap=512,
+                  compact_ratio=None)
+    o.insert(pool[n:n + b])                   # single-batch A/B (also warms)
+    delta_dists = o.last_update_stats.dists_evaluated
+    dist_reduction = rebuild_dists / max(delta_dists, 1.0)
+    assert dist_reduction >= 10.0, (
+        f"delta traversal evaluated {delta_dists:.0f} dists vs "
+        f"{rebuild_dists:.0f} for a full rebuild — only "
+        f"{dist_reduction:.1f}x (< 10x) for a {b / n:.2%} batch")
+
+    t0 = time.perf_counter()                  # steady state: jit is warm now
+    for i in range(1, batches):
+        o.insert(pool[n + b * i:n + b * (i + 1)])
+    stream_s = time.perf_counter() - t0
+    inserts_per_s = b * (batches - 1) / max(stream_s, 1e-9)
+    mean_insert_s = stream_s / (batches - 1)
+
+    folded = o.graph.delta_edges
+    tc0 = time.perf_counter()
+    o.compact()                               # fold the whole stream's log
+    compact_s = time.perf_counter() - tc0
+    assert not o.graph.has_delta
+
+    res = {
+        "workload": {"name": "blocked-clusters", "n": n, "dim": dim,
+                     "metric": "euclidean", "eps": eps, "nranks": nranks,
+                     "batch": b, "stream_batches": batches},
+        "pallas_mode": pallas_mode(),
+        "rebuild": {"elapsed_s": round(rebuild_s, 4),
+                    "dists_evaluated": int(rebuild_dists),
+                    "edges": g_full.num_edges},
+        "delta": {"dists_evaluated": int(delta_dists),
+                  "dist_reduction_x": round(dist_reduction, 1),
+                  "mean_insert_s": round(mean_insert_s, 4)},
+        "inserts_per_s": round(inserts_per_s, 1),
+        "update_speedup_x": round(rebuild_s / max(mean_insert_s, 1e-9), 2),
+        "compaction": {
+            "compact_s": round(compact_s, 4),
+            "delta_edges_folded": int(folded),
+            # one fold amortized over the stream it absorbed: the per-op
+            # overhead auto-compaction adds at this batch size
+            "amortized_frac": round(
+                compact_s / max(stream_s + compact_s, 1e-9), 4)},
+        "edges_added": int(o.stats.edges_added),
+        "update_s_total": round(o.stats.update_s, 4),
+    }
+    with open(json_path, "w") as fh:
+        json.dump(res, fh, indent=1)
+    emit(f"stream-device/ranks={nranks}", mean_insert_s * 1e6,
+         f"inserts_per_s={res['inserts_per_s']};dist_reduction="
+         f"{res['delta']['dist_reduction_x']}x;update_speedup="
+         f"{res['update_speedup_x']}x;json={json_path}")
+    return res
+
+
 # -- CI bench trend check ---------------------------------------------------
 
 # (json path, higher-is-better) metrics gated by the trend check.
@@ -625,6 +710,9 @@ TREND_METRICS = (
     ("build_s", False),                 # warm device forest build seconds
     ("forest_build.speedup_x", True),   # host / device build-time ratio
     ("ghost_ab.bytes_reduction_x", True),   # coll / ring ghost bytes
+    ("inserts_per_s", True),                # online insert throughput
+    ("delta.dist_reduction_x", True),       # rebuild / delta distance work
+    ("update_speedup_x", True),             # rebuild_s / mean insert_s
 )
 
 

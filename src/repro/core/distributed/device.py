@@ -799,6 +799,84 @@ def systolic_nng(points, eps, mesh, **kw):
 
 
 # ---------------------------------------------------------------------------
+# delta traversal — online-maintenance entry point (repro.stream)
+#
+# Deliberately NOT in the static-analysis matrices: it introduces no new
+# Pallas kernels (tree_frontier + the bits epilogue are reused as-is, and
+# their contracts are already registered in repro.analysis.contracts) and
+# no in-program collectives (the traffic audit has nothing to classify —
+# the only movement is the host-side batch broadcast, modeled by
+# ``delta_bcast_bytes`` and accounted per update as ``delta_bcast``).
+# ---------------------------------------------------------------------------
+
+def _delta_local(qp, qids, qbits, *forest_arrays, eps, metric, k_cap):
+    """Per-shard delta body: the (replicated) inserted batch traverses THIS
+    rank's forest once. ``qbits`` is an all-ones packed cell-membership
+    mask, so every tree of every cell is in scope — an inserted point must
+    be checked against the whole local forest regardless of which cell it
+    lands in (exactness needs no cell scoping here; the batch is tiny, so
+    widening scope costs frontier work only at the roots)."""
+    forest = DeviceForest(*[a[0] for a in forest_arrays])   # drop rank dim
+    nbrs, cnt, dists, pruned = tree_traverse(
+        qp, qids, None, forest, eps, k_cap, metric, qghost_bits=qbits)
+    return nbrs[None], cnt[None], dists[None], pruned[None]
+
+
+@functools.lru_cache(maxsize=64)
+def _delta_fn(mesh, eps, metric, k_cap, axis, pallas_mode):
+    """Memoized jitted shard_map program for the delta traversal (same
+    rationale as ``_systolic_fn``; ``pallas_mode`` keys trace-time tile
+    wrapper mode). No collective appears in the body: the batch arrives
+    replicated (host-side broadcast — the comm model the driver accounts
+    as ``delta_bcast``) and per-rank results come back rank-stacked."""
+    body = functools.partial(_delta_local, eps=eps, metric=metric,
+                             k_cap=k_cap)
+    return jax.jit(_shard_map(
+        body, mesh,
+        in_specs=(P(None, None), P(None), P(None, None))
+        + (P(axis),) * _N_FOREST,
+        out_specs=(P(axis, None), P(axis), P(axis), P(axis)),
+    ))
+
+
+def delta_traverse_run(qp, qids, forest: dict, eps, mesh: Mesh, *,
+                       metric="euclidean", k_cap: int = 64,
+                       axis: str = "ring"):
+    """Query ONLY the batch ``qp`` against every rank's forest — the online
+    insert path. Instead of re-running a full systolic/landmark schedule,
+    the inserted points are broadcast once and each rank runs one
+    level-synchronous traversal of its local forest; the union of per-rank
+    hits IS the new-edge set (forests partition the corpus).
+
+    Returns (nbrs (nranks*nq, k_cap) SENTINEL-padded, cnt (nranks*nq,),
+    dists (nranks,) float32, pruned (nranks,) float32): row r*nq + i holds
+    rank r's neighbors of query i, so pairing with ``tile(qids, nranks)``
+    recovers directed (src, dst) hit pairs. Self pairs are excluded by
+    global-id inequality inside ``tree_traverse`` as always.
+    """
+    met = get_metric(metric)
+    nranks = mesh.shape[axis]
+    nq = qp.shape[0]
+    # packed cell-membership mask wide enough for every cell id present
+    max_cell = int(np.max(np.asarray(forest["cell"]).max(initial=0), initial=0))
+    words = max_cell // 32 + 1
+    qbits = jnp.full((nq, words), jnp.uint32(0xFFFFFFFF))
+    fn = _delta_fn(mesh, float(eps), met, k_cap, axis, _pallas_mode())
+    ftabs = DeviceForest.from_tables(forest)
+    nbrs, cnt, dists, pruned = fn(
+        jnp.asarray(qp, met.dtype), jnp.asarray(qids, jnp.int32), qbits,
+        *ftabs)
+    return (nbrs.reshape(nranks * nq, -1), cnt.reshape(nranks * nq),
+            dists, pruned)
+
+
+def delta_bcast_bytes(nranks: int, nq: int, dim: int, itemsize: int) -> int:
+    """Host-side comm model of the delta broadcast: every other rank
+    receives the batch's coords + int32 ids once."""
+    return (nranks - 1) * nq * (dim * itemsize + 4)
+
+
+# ---------------------------------------------------------------------------
 # Algorithms 5 + 6 — landmark partitioning with ε-ghosts
 # ---------------------------------------------------------------------------
 

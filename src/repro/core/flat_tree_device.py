@@ -386,6 +386,104 @@ def build_block_forests_device(points, nranks: int, metric="euclidean",
                           met, leaf_size, max_levels, include_child_ranges)
 
 
+@jax.jit
+def _insert_roots_jit(tabs, ridx, newp, newg, newc, newrank):
+    """Scatter each batch point as a singleton root of its owning rank.
+
+    Returns (tables, overflow (nranks,) bool). Out-of-capacity scatters
+    drop (jnp ``mode="drop"``), so on overflow the caller regrows padding
+    and simply re-runs on the ORIGINAL tables."""
+    def one(tab, r):
+        coords, rad, cell, leaf, par, llo, lhi, lid = (
+            tab["coords"], tab["radius"], tab["cell"], tab["leaf"],
+            tab["parent"], tab["leaf_lo"], tab["leaf_hi"], tab["leaf_ids"])
+        N = cell.shape[1]
+        nl = lid.shape[0]
+        used0 = jnp.sum((cell[0] != PAD).astype(jnp.int32))
+        usedl = jnp.max(lhi)
+        mask = newrank == r
+        k = jnp.cumsum(mask.astype(jnp.int32)) - 1
+        cnt = jnp.sum(mask.astype(jnp.int32))
+        overflow = (used0 + cnt > N) | (usedl + cnt > nl)
+        sl = jnp.where(mask, used0 + k, N)          # drop when not ours
+        lp = jnp.where(mask, usedl + k, nl)
+        b = mask.shape[0]
+        out = {
+            "coords": coords.at[0, sl].set(newp, mode="drop"),
+            "radius": rad.at[0, sl].set(jnp.zeros(b, rad.dtype),
+                                        mode="drop"),
+            "cell": cell.at[0, sl].set(newc, mode="drop"),
+            "leaf": leaf.at[0, sl].set(jnp.ones(b, leaf.dtype),
+                                       mode="drop"),
+            "parent": par.at[0, sl].set(jnp.zeros(b, par.dtype),
+                                        mode="drop"),
+            "leaf_lo": llo.at[0, sl].set(lp.astype(llo.dtype), mode="drop"),
+            "leaf_hi": lhi.at[0, sl].set((lp + 1).astype(lhi.dtype),
+                                         mode="drop"),
+            "leaf_ids": lid.at[lp].set(newg, mode="drop"),
+        }
+        return out, overflow
+
+    return jax.vmap(one, in_axes=(0, 0))(tabs, ridx)
+
+
+def _grow_stacked(tabs):
+    """Double both the level width and the leaf capacity (host-side pad,
+    mirroring the builder's regrow-on-overflow doubling)."""
+    out = {}
+    for k, a in tabs.items():
+        a = np.asarray(a)
+        if k == "leaf_ids":
+            pad = np.full((a.shape[0], a.shape[1]), SENTINEL_ID, a.dtype)
+            out[k] = np.concatenate([a, pad], axis=1)
+        else:
+            fill = PAD if k == "cell" else 0
+            pad = np.full(a.shape[:2] + (a.shape[2],) + a.shape[3:], fill,
+                          a.dtype)
+            out[k] = np.concatenate([a, pad], axis=2)
+    return {k: jnp.asarray(v) for k, v in out.items()}
+
+
+def insert_stacked_device(tabs, new_points, new_gids, new_ranks,
+                          new_cells=None):
+    """Batched device-side incremental insert into stacked forest tables.
+
+    Each new point is appended as a singleton ROOT of its owning rank's
+    forest — exact by construction (roots are always on the traversal
+    frontier) at the cost of one extra root per insert until the next full
+    rebuild; the host descent path (``FlatCoverTree.insert_host``) is the
+    structure-preserving variant. Overflowing the padded width regrows by
+    doubling and retries, like the builder.
+    """
+    nranks = int(np.asarray(tabs["cell"]).shape[0])
+    dt = tabs["coords"].dtype
+    newp = jnp.asarray(new_points, dt)
+    newg = jnp.asarray(new_gids, jnp.int32)
+    newr = jnp.asarray(new_ranks, jnp.int32)
+    newc = (jnp.zeros(len(newg), jnp.int32) if new_cells is None
+            else jnp.asarray(new_cells, jnp.int32))
+    ridx = jnp.arange(nranks, dtype=jnp.int32)
+    while True:
+        out, overflow = _insert_roots_jit(tabs, ridx, newp, newg, newc,
+                                          newr)
+        if not bool(np.any(np.asarray(overflow))):
+            return out
+        tabs = _grow_stacked(tabs)
+
+
+def tombstone_stacked_device(tabs, dead_ids):
+    """Mask deleted points in stacked tables: every device emission flows
+    through leaf ranges (``leaf_range_pack`` drops SENTINEL entries), so
+    rewriting ``leaf_ids`` alone fully hides them; dead singleton-root
+    coordinates stay as harmless routing pivots."""
+    dead = jnp.asarray(np.asarray(dead_ids, np.int64), jnp.int32)
+    lid = tabs["leaf_ids"]
+    out = dict(tabs)
+    out["leaf_ids"] = jnp.where(jnp.isin(lid, dead),
+                                jnp.int32(SENTINEL_ID), lid)
+    return out
+
+
 def build_cell_forests_device(points, cell, f, nranks: int,
                               metric="euclidean", leaf_size: int = 10,
                               max_levels: int | None = None,

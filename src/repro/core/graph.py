@@ -48,6 +48,11 @@ class RunStats:
                                    # throughput; 0.0 when not estimated)
     comm_s_est: float = 0.0        # elapsed_s - kernel_s_est when estimated:
                                    # collectives + dispatch + epilogues
+    update_s: float = 0.0          # wall clock spent in online updates
+                                   # (OnlineNNG insert/delete, cumulative —
+                                   # separate from the batch elapsed_s)
+    edges_added: float = 0.0       # undirected edges appended by updates
+    edges_removed: float = 0.0     # undirected edges dropped by tombstones
 
     @property
     def total_comm_bytes(self) -> float:
@@ -65,6 +70,15 @@ class NNGraph:
     neighbors are ``col_ids[row_ptr[i]:row_ptr[i+1]]``, sorted ascending.
     The adjacency is symmetric (both directions stored), so
     ``row_ptr[-1] == 2 * num_edges``.
+
+    On top of the base CSR sits an optional **delta log** for online
+    maintenance: an append-only list of added undirected edges plus a set
+    of tombstoned node ids. All read accessors (``neighbors``,
+    ``degrees``, ``edge_key``, ``num_edges``, ``to_eps_graph``, equality)
+    present the MERGED view — base + adds − tombstoned — so a graph with
+    a pending delta log is indistinguishable from its compacted form.
+    ``compact()`` folds the log into a clean base CSR; edge keys are
+    int64 throughout (``i * n + j`` overflows int32 from n ≈ 46k).
     """
 
     def __init__(self, n: int, row_ptr: np.ndarray, col_ids: np.ndarray,
@@ -76,6 +90,135 @@ class NNGraph:
         assert self.row_ptr[-1] == len(self.col_ids)
         self.stats = stats if stats is not None else RunStats()
         self.meta = dict(meta or {})
+        # delta log: canonical (lo < hi) added edges, tombstoned node ids
+        self._add_lo = np.zeros(0, np.int64)
+        self._add_hi = np.zeros(0, np.int64)
+        self._dead = np.zeros(0, np.int64)      # sorted tombstoned ids
+        self._dead_dirty = False                # base still holds dead edges
+        self._tomb_edges = 0                    # edges removed since compact
+        self._merged_cache = None
+
+    # -- delta log (online maintenance layer) -------------------------------
+    @property
+    def has_delta(self) -> bool:
+        """True when reads must merge (pending adds or un-folded deletes)."""
+        return len(self._add_lo) > 0 or self._dead_dirty
+
+    @property
+    def delta_edges(self) -> int:
+        return len(self._add_lo)
+
+    def _invalidate(self):
+        self._merged_cache = None
+
+    def _merged(self):
+        """(row_ptr, col_ids) of the merged view (cached until mutated)."""
+        if not self.has_delta:
+            return self.row_ptr, self.col_ids
+        if self._merged_cache is None:
+            rows = np.repeat(np.arange(self.n, dtype=np.int64),
+                             np.diff(self.row_ptr))
+            cols = self.col_ids.astype(np.int64)
+            src = np.concatenate([rows, self._add_lo, self._add_hi])
+            dst = np.concatenate([cols, self._add_hi, self._add_lo])
+            if self._dead_dirty and len(self._dead):
+                live = ~(np.isin(src, self._dead) | np.isin(dst, self._dead))
+                src, dst = src[live], dst[live]
+            key = np.unique(src * self.n + dst)
+            rp = np.zeros(self.n + 1, np.int64)
+            np.cumsum(np.bincount(key // self.n, minlength=self.n),
+                      out=rp[1:])
+            self._merged_cache = (rp, (key % self.n).astype(np.int32))
+        return self._merged_cache
+
+    def delta_insert_nodes(self, k: int) -> np.ndarray:
+        """Grow the node set by ``k`` isolated nodes; returns their ids.
+        Ids are allocated densely at the end and never reused."""
+        ids = np.arange(self.n, self.n + int(k), dtype=np.int64)
+        self.row_ptr = np.concatenate(
+            [self.row_ptr, np.full(int(k), self.row_ptr[-1], np.int64)])
+        self.n += int(k)
+        self._invalidate()
+        return ids
+
+    def delta_add_edges(self, src, dst) -> int:
+        """Append undirected edges to the delta log. Drops self loops,
+        out-of-range / SENTINEL endpoints (driver padding), edges touching
+        tombstoned nodes, and duplicates (within the batch and against the
+        current merged view). Returns the count of genuinely new edges."""
+        src = np.asarray(src, np.int64).ravel()
+        dst = np.asarray(dst, np.int64).ravel()
+        lo = np.minimum(src, dst)
+        hi = np.maximum(src, dst)
+        keep = (lo != hi) & (lo >= 0) & (hi < self.n)
+        if len(self._dead):
+            keep &= ~(np.isin(lo, self._dead) | np.isin(hi, self._dead))
+        key = np.unique(lo[keep] * self.n + hi[keep])
+        if len(key):
+            rp, cols = self._merged()
+            rows = np.repeat(np.arange(self.n, dtype=np.int64), np.diff(rp))
+            cols = cols.astype(np.int64)
+            upper = rows < cols
+            have = rows[upper] * self.n + cols[upper]
+            key = np.setdiff1d(key, have, assume_unique=True)
+        if not len(key):
+            return 0
+        self._add_lo = np.concatenate([self._add_lo, key // self.n])
+        self._add_hi = np.concatenate([self._add_hi, key % self.n])
+        self.stats.edges_added += float(len(key))
+        self._invalidate()
+        return len(key)
+
+    def delta_delete_nodes(self, ids) -> int:
+        """Tombstone nodes: their edges vanish from the merged view and
+        future adds touching them are rejected. Returns the number of
+        undirected edges removed."""
+        ids = np.unique(np.asarray(ids, np.int64).ravel())
+        ids = ids[(ids >= 0) & (ids < self.n)]
+        ids = np.setdiff1d(ids, self._dead, assume_unique=True)
+        if not len(ids):
+            return 0
+        rp, cols = self._merged()
+        rows = np.repeat(np.arange(self.n, dtype=np.int64), np.diff(rp))
+        cols = cols.astype(np.int64)
+        hit = np.isin(rows, ids) | np.isin(cols, ids)
+        removed = int(np.count_nonzero(hit & (rows < cols)))
+        self._dead = np.union1d(self._dead, ids)
+        self._dead_dirty = True
+        # prune the add-log of edges now dead (keeps the log size honest)
+        if len(self._add_lo):
+            live = ~(np.isin(self._add_lo, ids) | np.isin(self._add_hi, ids))
+            self._add_lo, self._add_hi = self._add_lo[live], self._add_hi[live]
+        self._tomb_edges += removed
+        self.stats.edges_removed += float(removed)
+        self._invalidate()
+        return removed
+
+    def compact(self) -> "NNGraph":
+        """Fold the delta log into a clean base CSR, in place. Idempotent:
+        compacting twice (or reading through a pending log) yields the same
+        merged view. Tombstoned ids stay recorded so later adds touching
+        them are still rejected."""
+        if self.has_delta:
+            rp, cols = self._merged()
+            self.row_ptr = np.asarray(rp, np.int64)
+            self.col_ids = np.asarray(cols, np.int32)
+            self._add_lo = np.zeros(0, np.int64)
+            self._add_hi = np.zeros(0, np.int64)
+            self._dead_dirty = False
+            self._tomb_edges = 0
+            self._invalidate()
+            self.meta["compactions"] = int(self.meta.get("compactions", 0)) + 1
+        return self
+
+    def maybe_compact(self, ratio: float = 0.5) -> bool:
+        """Size-ratio auto-compaction: fold once the pending delta (added
+        plus tombstone-removed edges) exceeds ``ratio`` × base edges."""
+        base = max(len(self.col_ids) // 2, 1)
+        if self.delta_edges + self._tomb_edges > ratio * base:
+            self.compact()
+            return True
+        return False
 
     # -- constructors -------------------------------------------------------
     @classmethod
@@ -122,44 +265,69 @@ class NNGraph:
     @property
     def num_edges(self) -> int:
         """Undirected edge count (the symmetric CSR stores 2 per edge)."""
-        return int(self.row_ptr[-1]) // 2
+        return int(self._merged()[0][-1]) // 2
 
     @property
     def avg_degree(self) -> float:
-        return float(self.row_ptr[-1]) / max(self.n, 1)
+        return float(self._merged()[0][-1]) / max(self.n, 1)
 
     def degrees(self) -> np.ndarray:
-        return np.diff(self.row_ptr)
+        return np.diff(self._merged()[0])
 
     def neighbors(self, i: int) -> np.ndarray:
-        return self.col_ids[self.row_ptr[i]:self.row_ptr[i + 1]]
+        base = self.col_ids[self.row_ptr[i]:self.row_ptr[i + 1]]
+        if not self.has_delta:
+            return base
+        # cheap per-row merge: no full CSR rebuild for point lookups
+        if self._dead_dirty and len(self._dead):
+            if np.isin(i, self._dead):
+                return np.zeros(0, self.col_ids.dtype)
+            base = base[~np.isin(base.astype(np.int64), self._dead)]
+        add = np.concatenate([self._add_hi[self._add_lo == i],
+                              self._add_lo[self._add_hi == i]])
+        if not len(add):
+            return np.asarray(base)
+        return np.unique(np.concatenate(
+            [base.astype(np.int64), add])).astype(self.col_ids.dtype)
 
     def edge_key(self) -> np.ndarray:
-        """Canonical (i < j) edge keys i * n + j, sorted — the same
+        """Canonical (i < j) edge keys i * n + j, sorted, int64 — the same
         encoding ``EpsGraph.edge_key`` uses, for direct comparison."""
-        rows = np.repeat(np.arange(self.n, dtype=np.int64),
-                         np.diff(self.row_ptr))
-        cols = self.col_ids.astype(np.int64)
+        rp, col = self._merged()
+        rows = np.repeat(np.arange(self.n, dtype=np.int64), np.diff(rp))
+        cols = col.astype(np.int64)
         upper = rows < cols
         return np.sort(rows[upper] * self.n + cols[upper])
 
     def to_eps_graph(self) -> "EpsGraph":
-        rows = np.repeat(np.arange(self.n, dtype=np.int64),
-                         np.diff(self.row_ptr))
-        return EpsGraph(self.n, rows, self.col_ids.astype(np.int64))
+        rp, col = self._merged()
+        rows = np.repeat(np.arange(self.n, dtype=np.int64), np.diff(rp))
+        return EpsGraph(self.n, rows, col.astype(np.int64))
 
     def to_scipy_csr(self):
-        """The adjacency as a ``scipy.sparse.csr_array`` of uint8 ones."""
-        from scipy.sparse import csr_array
-        data = np.ones(len(self.col_ids), np.uint8)
-        return csr_array((data, self.col_ids, self.row_ptr),
-                         shape=(self.n, self.n))
+        """The adjacency (merged view) as a ``scipy.sparse.csr_array`` of
+        uint8 ones. scipy is an optional dependency — imported lazily."""
+        try:
+            from scipy.sparse import csr_array
+        except ImportError as e:
+            raise ImportError(
+                "NNGraph.to_scipy_csr requires the optional dependency "
+                "scipy, which is not installed. The raw CSR arrays are "
+                "available without scipy as .row_ptr / .col_ids "
+                "(merged view via edge_key() / to_eps_graph())."
+            ) from e
+        rp, col = self._merged()
+        data = np.ones(len(col), np.uint8)
+        return csr_array((data, col, rp), shape=(self.n, self.n))
 
     def __eq__(self, other) -> bool:
         if isinstance(other, NNGraph):
-            return (self.n == other.n
-                    and np.array_equal(self.row_ptr, other.row_ptr)
-                    and np.array_equal(self.col_ids, other.col_ids))
+            if self.n != other.n:
+                return False
+            rp_a, col_a = self._merged()
+            rp_b, col_b = other._merged()
+            return (np.array_equal(rp_a, rp_b)
+                    and np.array_equal(col_a, col_b))
         if isinstance(other, EpsGraph):
             return (self.n == other.n
                     and np.array_equal(self.edge_key(), other.edge_key()))

@@ -82,6 +82,60 @@ def edges_from_neighbor_lists(ids, nbrs):
     return ids[ii], nbrs[ii, kk]
 
 
+def _run_updates(args, pts, mesh, partition):
+    """``--updates`` replay: build on a prefix, stream the reserved points
+    in as insert batches interleaved with random deletes, report update
+    throughput and delta-log state, optionally verify the final view."""
+    from repro.stream import OnlineNNG
+
+    rng = np.random.default_rng(args.seed)
+    b = max(args.update_batch, 1)
+    reserve = min(args.updates * b, len(pts) // 2)
+    n0 = len(pts) - reserve
+    o = OnlineNNG(pts[:n0], args.eps, metric=args.metric,
+                  partition=partition, mesh=mesh, k_cap=args.k_cap,
+                  seed=args.seed)
+    print(f"online: built on {n0}, replaying {args.updates} updates "
+          f"(batch {b})")
+    cursor = n0
+    for step in range(args.updates):
+        if step % 3 == 2 and o.num_live > b:     # every third op: delete
+            live = np.flatnonzero(o.live)
+            o.delete(rng.choice(live, size=min(b, len(live) // 2),
+                                replace=False))
+            kind = "delete"
+        elif cursor < len(pts):
+            o.insert(pts[cursor:cursor + b])
+            cursor = min(cursor + b, len(pts))
+            kind = "insert"
+        else:
+            break
+        st = o.last_update_stats
+        print(f"  [{step}] {kind}: live={o.num_live} "
+              f"delta_edges={o.graph.delta_edges} "
+              f"dists={0 if st is None else st.dists_evaluated:.0f}")
+    g = o.graph
+    print(f"{g} after updates: update_s={g.stats.update_s:.2f}s "
+          f"edges_added={g.stats.edges_added:.0f} "
+          f"edges_removed={g.stats.edges_removed:.0f} "
+          f"compactions={g.meta.get('compactions', 0)}")
+    if args.verify:
+        from repro.core.brute import brute_force_graph
+        live = np.flatnonzero(o.live)
+        gb = brute_force_graph(o.points[live], args.eps, args.metric)
+        # compare on live ids: relabel brute's compact ids back to globals
+        key = g.edge_key()
+        src, dst = live[gb.src], live[gb.dst]
+        bkey = np.sort(src * g.n + dst)
+        if np.array_equal(key, bkey):
+            print(f"verify vs brute force on live points: EXACT MATCH ({gb})")
+        else:
+            print(f"verify: {len(np.setxor1d(key, bkey))} differing edges "
+                  "-> MISMATCH")
+            raise SystemExit(1)
+    return g
+
+
 def main(argv=None):
     from repro.core.metrics import registered_metrics
 
@@ -111,6 +165,14 @@ def main(argv=None):
                     help="landmark ε-ghost schedule: capacity-padded "
                          "all_to_all (coll), ghost-free block rotation "
                          "(ring), or the byte-model pick (auto)")
+    ap.add_argument("--updates", type=int, default=0,
+                    help="online-maintenance replay: reserve part of the "
+                         "point set, build the graph on the rest, then run "
+                         "this many randomized insert/delete batches "
+                         "through repro.stream.OnlineNNG (--verify checks "
+                         "the FINAL merged view against brute force)")
+    ap.add_argument("--update-batch", type=int, default=32,
+                    help="points per online insert/delete batch")
     args = ap.parse_args(argv)
 
     from repro.data import synthetic_pointset
@@ -123,6 +185,9 @@ def main(argv=None):
     print(f"n={args.n} dim={args.dim} metric={args.metric} eps={args.eps} "
           f"ranks={mesh.size} partition={partition} "
           f"traversal={args.traversal}")
+
+    if args.updates > 0:
+        return _run_updates(args, pts, mesh, partition)
 
     g = build_nng(
         pts, args.eps, metric=args.metric, partition=partition,

@@ -35,18 +35,19 @@ import time
 import jax
 import numpy as np
 
-from repro.core.distributed import (LandmarkPlan, ghost_coll_bytes,
+from repro.core.distributed import (LandmarkPlan, delta_bcast_bytes,
+                                    delta_traverse_run, ghost_coll_bytes,
                                     ghost_ring_bytes, landmark_run,
                                     make_nng_mesh, plan_landmark_device,
                                     plan_ring_schedule, resolve_ghost_mode,
                                     systolic_run)
-from repro.core.graph import NNGraph, RunStats
+from repro.core.graph import NNGraph, RunStats, SENTINEL
 from repro.core.landmark import ghost_membership, lpt_assignment, select_centers
 from repro.core.metrics import Metric, get_metric, register_metric  # noqa: F401 (re-export)
 
-__all__ = ["build_nng", "drive", "Engine", "PointPartitionEngine",
-           "SpatialPartitionEngine", "grow_plan", "Metric", "get_metric",
-           "register_metric"]
+__all__ = ["build_nng", "delta_run", "drive", "DeltaEngine", "Engine",
+           "PointPartitionEngine", "SpatialPartitionEngine", "grow_plan",
+           "Metric", "get_metric", "register_metric"]
 
 
 # ---------------------------------------------------------------------------
@@ -423,6 +424,99 @@ class SpatialPartitionEngine(Engine):
             nodes_pruned=float(np.asarray(out[10]).sum()),
             comm_bytes=self._landmark_comm_bytes(plan),
         )
+
+
+# ---------------------------------------------------------------------------
+# delta traversal (online maintenance — repro.stream's engine)
+# ---------------------------------------------------------------------------
+
+class DeltaEngine(Engine):
+    """Query ONE inserted batch against the per-rank forests.
+
+    The online-insert engine: instead of re-running a full systolic or
+    landmark schedule over the corpus, the (tiny) batch is broadcast and
+    every rank traverses its local forest once — work scales with the
+    batch's frontier, not with n. Shares ``drive``'s grow-on-overflow
+    loop; the only plan knob is ``k_cap``.
+    """
+
+    name = "delta"
+
+    def __init__(self, batch_points, batch_ids, forest: dict, eps, mesh,
+                 metric, *, k_cap: int = 64, axis: str = "ring"):
+        self.metric = get_metric(metric)
+        self.forest = forest
+        self.eps = float(eps)
+        self.mesh = mesh
+        self.k_cap = int(k_cap)
+        self.axis = axis
+        self.build_s = 0.0
+        qp = np.asarray(batch_points)
+        ids = np.asarray(batch_ids, np.int64)
+        assert len(qp) == len(ids) and len(qp) > 0
+        # pad the batch to the next power of two (>= 8): arbitrary batch
+        # sizes would retrace the jitted program per size; padded rows
+        # carry SENTINEL ids, so their hits drop at CSR assembly
+        m = 8
+        while m < len(qp):
+            m *= 2
+        self.qp = np.concatenate(
+            [qp, np.broadcast_to(qp[:1], (m - len(qp),) + qp.shape[1:])])
+        self.qids = np.concatenate(
+            [ids, np.full(m - len(ids), SENTINEL, np.int64)])
+
+    def initial_plan(self):
+        return self.k_cap
+
+    def run(self, k_cap):
+        return delta_traverse_run(
+            self.qp, self.qids, self.forest, self.eps, self.mesh,
+            metric=self.metric, k_cap=k_cap, axis=self.axis)
+
+    def overflowed(self, out):
+        # cnt is exact even on overflow (popcount of the full bitmask)
+        return bool((np.asarray(out[1]) > np.asarray(out[0]).shape[1]).any())
+
+    def grow(self, k_cap, out):
+        return max(2 * k_cap, int(np.asarray(out[1]).max()))
+
+    def neighbor_tables(self, out):
+        nranks = self.mesh.shape[self.axis]
+        return [(np.tile(self.qids, nranks), np.asarray(out[0]))]
+
+    def run_stats(self, out, k_cap) -> RunStats:
+        nranks = self.mesh.shape[self.axis]
+        return RunStats(
+            dists_evaluated=float(np.asarray(out[2]).sum()),
+            nodes_pruned=float(np.asarray(out[3]).sum()),
+            comm_bytes={"delta_bcast": float(delta_bcast_bytes(
+                nranks, self.qp.shape[0], self.qp.shape[1],
+                self.qp.dtype.itemsize))},
+        )
+
+
+def delta_run(batch_points, batch_ids, forest: dict, eps, mesh, *,
+              metric="euclidean", k_cap: int = 64, axis: str = "ring",
+              max_grows: int = 8):
+    """Directed new-edge pairs of an inserted batch vs the current forest.
+
+    Runs ``DeltaEngine`` under ``drive`` (without the steady-state timing
+    re-run — update latency is what matters online) and flattens the
+    rank-stacked neighbor tables to (src, dst) directed id pairs plus a
+    ``RunStats``. Symmetrize downstream (``NNGraph.delta_add_edges``
+    canonicalizes) — a batch-internal pair appears from both endpoints.
+    """
+    engine = DeltaEngine(batch_points, batch_ids, forest, eps, mesh, metric,
+                         k_cap=k_cap, axis=axis)
+    out, plan, replans, elapsed = drive(engine, max_grows=max_grows,
+                                        steady_state=False)
+    stats = engine.run_stats(out, plan)
+    stats.replans = replans
+    stats.elapsed_s = elapsed
+    [(ids, nbrs)] = engine.neighbor_tables(out)
+    valid = ids != SENTINEL
+    ii, kk = np.nonzero((nbrs != SENTINEL) & valid[:, None])
+    return ids[ii], nbrs[ii, kk].astype(np.int64), stats
 
 
 # ---------------------------------------------------------------------------

@@ -38,6 +38,7 @@ def test_nngraph_from_directed_pairs():
     ep = g.to_eps_graph()
     assert isinstance(ep, EpsGraph) and ep.num_edges == 3
     assert g == ep
+    pytest.importorskip("scipy")    # optional dep: lazy in to_scipy_csr
     csr = g.to_scipy_csr()
     assert csr.shape == (n, n) and csr.nnz == 6
     assert (np.asarray(csr.todense()) == np.asarray(csr.todense()).T).all()
@@ -54,6 +55,7 @@ def test_nngraph_from_neighbor_tables():
     st = RunStats(tiles_scheduled=4.0, tiles_skipped=1.0)
     g = NNGraph.from_neighbor_tables(n, [(ids, nbrs)], stats=st,
                                      meta={"metric": "euclidean"})
+    pytest.importorskip("scipy")    # optional dep: lazy in to_scipy_csr
     assert sorted(map(tuple, zip(*np.nonzero(g.to_scipy_csr().todense())))) \
         == [(0, 1), (0, 2), (1, 0), (2, 0)]
     assert g.stats.tile_skip_rate == 0.25
